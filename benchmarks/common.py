@@ -1,0 +1,80 @@
+"""Shared benchmark fixtures: the paper's Table-2 workloads + helpers."""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.core.cost_model import HardwareSpec, SegmentCosts
+from repro.core.policies import ClusterView
+from repro.models.config import ModelConfig
+
+# Paper Table 2 — Llama-2 workloads on 96 NPUs (TP=4 fixed; workers = TP
+# groups; one node = 8 NPUs = 2 workers).
+LLAMA2 = {
+    "llama2-7b": dict(
+        cfg=ModelConfig(name="llama2-7b", family="dense", num_layers=32,
+                        d_model=4096, num_heads=32, num_kv_heads=32,
+                        d_ff=11008, vocab_size=32000),
+        tp=4, pp=3, dp=8, mbs=4, global_batch=8192, seq=4096),
+    "llama2-13b": dict(
+        cfg=ModelConfig(name="llama2-13b", family="dense", num_layers=40,
+                        d_model=5120, num_heads=40, num_kv_heads=40,
+                        d_ff=13824, vocab_size=32000),
+        tp=4, pp=6, dp=4, mbs=2, global_batch=2048, seq=4096),
+    "llama2-34b": dict(
+        cfg=ModelConfig(name="llama2-34b", family="dense", num_layers=48,
+                        d_model=8192, num_heads=64, num_kv_heads=8,
+                        d_ff=22016, vocab_size=32000),
+        tp=4, pp=8, dp=3, mbs=1, global_batch=768, seq=4096),
+}
+
+# a TP-4 worker of Ascend-910B-like chips, normalized
+WORKER_HW = HardwareSpec(peak_flops=4 * 376e12 / 2, hbm_bw=4 * 1.6e12,
+                         link_bw=25e9, hbm_bytes=4 * 32e9, mfu=0.4)
+
+
+def build_view(w: Dict, alive=None, slow=None, mem_cap=None) -> Tuple[SegmentCosts, ClusterView]:
+    cfg, dp, pp = w["cfg"], w["dp"], w["pp"]
+    seg = SegmentCosts.build(cfg, w["seq"], WORKER_HW)
+    num_micro = w["global_batch"] // (w["mbs"] * dp)
+    L = cfg.num_layers
+    per = L // pp
+    rem = L % pp
+    ranges, a = [], 0
+    for p in range(pp):
+        b = a + per + (1 if p < rem else 0) - 1
+        ranges.append((a, b)); a = b + 1
+    view = ClusterView(
+        dp=dp, pp=pp, global_batch=w["global_batch"], num_micro=num_micro,
+        seq=w["seq"], layer_assignment=ranges,
+        alive=alive if alive is not None else np.ones((dp, pp), bool),
+        freq=np.ones((dp, pp)), slow=slow if slow is not None else np.ones((dp, pp)),
+        mem_cap=mem_cap if mem_cap is not None else WORKER_HW.hbm_bytes)
+    return seg, view
+
+
+def kill_nodes(view: ClusterView, n_nodes: int):
+    """One node = 2 workers: kill cells (d, p) pairs replica-major, matching
+    the paper's shrink pattern (distinct replicas first)."""
+    killed = 0
+    d = 0
+    while killed < 2 * n_nodes and d < view.dp:
+        for p in (0, 1):
+            if killed < 2 * n_nodes:
+                view.alive[d % view.dp, (p + d) % view.pp] = False
+                killed += 1
+        d += 1
+    return view
+
+
+def timeit(fn, *args, reps=3, **kw):
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args, **kw)
+    return (time.perf_counter() - t0) / reps, out
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,48 @@
+"""Fig. 12b — communication-group recovery time: Dynamic Communicator
+(in-place edit) vs partial vs full rebuild, 8..64 ranks."""
+from __future__ import annotations
+
+import time
+
+from repro.core.communicator import DynamicCommunicator, build_hybrid_groups
+from .common import emit
+
+
+def run(verbose=True):
+    rows = []
+    for n_ranks in (8, 16, 32, 64):
+        dp = max(n_ranks // 4, 2)
+        pp = n_ranks // dp
+        groups = build_hybrid_groups(dp, pp)
+        dead = 1
+        c1 = DynamicCommunicator(groups)
+        t_edit = c1.edit(remove=[dead]).seconds
+        c2 = DynamicCommunicator(groups)
+        t_part = c2.partial_rebuild(remove=[dead]).seconds
+        c3 = DynamicCommunicator(groups)
+        ng = {k: [r for r in v if r != dead] for k, v in c3.groups.items()}
+        t_full = c3.full_rebuild(ng).seconds
+        rows.append((n_ranks, t_edit, t_part, t_full))
+        if verbose:
+            print(f"  ranks={n_ranks:3d} edit={t_edit:.3f}s "
+                  f"partial={t_part:.3f}s full={t_full:.3f}s "
+                  f"speedup_full={t_full / t_edit:.0f}x "
+                  f"speedup_partial={t_part / t_edit:.1f}x")
+    return rows
+
+
+def main():
+    t0 = time.perf_counter()
+    rows = run()
+    us = (time.perf_counter() - t0) * 1e6 / max(len(rows), 1)
+    worst_edit = max(r[1] for r in rows)
+    best_full_speedup = max(r[3] / r[1] for r in rows)
+    best_part_speedup = max(r[2] / r[1] for r in rows)
+    emit("fig12b_communicator_mttr", us,
+         f"edit<={worst_edit:.2f}s;vs_full={best_full_speedup:.0f}x;"
+         f"vs_partial={best_part_speedup:.1f}x")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""§Roofline — aggregate the dry-run artifacts into the per-(arch x shape x
+mesh) roofline table: three terms, bottleneck, MODEL_FLOPS/HLO_FLOPs ratio."""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+from .common import emit
+
+ART_DIR = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+
+def load_artifacts():
+    arts = []
+    for f in sorted(ART_DIR.glob("*.json")):
+        arts.append(json.loads(f.read_text()))
+    return arts
+
+
+def table(arts, mesh="single", verbose=True):
+    rows = []
+    hdr = (f"{'arch':26s} {'shape':12s} {'compute_s':>10s} {'memory_s':>10s} "
+           f"{'coll_s':>10s} {'bottleneck':>10s} {'useful':>7s}")
+    if verbose:
+        print("  " + hdr)
+    for a in arts:
+        if a.get("mesh") != mesh:
+            continue
+        if a["status"] == "skipped":
+            if verbose:
+                print(f"  {a['arch']:26s} {a['shape']:12s} "
+                      f"{'—':>10s} {'—':>10s} {'—':>10s} {'skipped':>10s}")
+            rows.append((a["arch"], a["shape"], None))
+            continue
+        r = a["roofline"]
+        uf = a.get("useful_fraction")
+        if verbose:
+            print(f"  {a['arch']:26s} {a['shape']:12s} "
+                  f"{r['compute_s']:10.3g} {r['memory_s']:10.3g} "
+                  f"{r['collective_s']:10.3g} {r['bottleneck']:>10s} "
+                  f"{uf:7.3f}" if uf else "")
+        rows.append((a["arch"], a["shape"], r))
+    return rows
+
+
+def main():
+    t0 = time.perf_counter()
+    arts = load_artifacts()
+    ok = [a for a in arts if a["status"] == "ok"]
+    skipped = [a for a in arts if a["status"] == "skipped"]
+    rows = table(arts, "single")
+    us = (time.perf_counter() - t0) * 1e6
+    bcounts = {}
+    for a in ok:
+        if a["mesh"] == "single":
+            b = a["roofline"]["bottleneck"]
+            bcounts[b] = bcounts.get(b, 0) + 1
+    emit("roofline_dryrun", us,
+         f"cells_ok={len(ok)};skipped={len(skipped)};bottlenecks={bcounts}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Benchmark aggregator — one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows (plus per-benchmark detail)."""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from . import (communicator_mttr, convergence_consistency, failslow,
+                   lse_breakdown, migration_mttr, moe_case, roofline,
+                   snapshot_overhead, spot_trace, throughput_failstop)
+    print("name,us_per_call,derived")
+    mods = [
+        ("fig11", throughput_failstop),
+        ("fig12a", lse_breakdown),
+        ("fig12b", communicator_mttr),
+        ("fig13", migration_mttr),
+        ("table3", snapshot_overhead),
+        ("sec7.5", convergence_consistency),
+        ("fig14", spot_trace),
+        ("fig15a", failslow),
+        ("sec7.7", moe_case),
+        ("roofline", roofline),
+    ]
+    failed = []
+    for name, mod in mods:
+        try:
+            mod.main()
+        except Exception:
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print(f"FAILED: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

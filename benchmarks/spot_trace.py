@@ -1,0 +1,72 @@
+"""Fig. 14 — time-averaged throughput on spot-instance-style traces.
+
+Trace A: plateau-heavy (long stable windows, occasional shrink/regrow).
+Trace B: shrink-heavy (frequent preemptions).  Capacity pattern follows the
+SpotServe-style traces the paper replays.  Each policy pays its own MTTR on
+every capacity change (TorchFT: restart ~20 s; ReCycle/ElasWave: online)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.policies import ElasWavePolicy, ReCyclePolicy, TorchFTPolicy
+from .common import LLAMA2, WORKER_HW, build_view, kill_nodes, emit
+
+# (duration_s, nodes_down) segments
+TRACE_A = [(600, 0), (300, 1), (900, 1), (120, 2), (600, 1), (900, 0)]
+TRACE_B = [(180, 0), (120, 1), (120, 2), (180, 3), (120, 2), (120, 3),
+           (180, 1), (120, 2), (120, 0)]
+
+MTTR = {"elaswave": 1.2, "recycle": 3.0, "torchft": 20.0}
+
+
+def run_trace(w, trace, pol):
+    seg, view0 = build_view(w)
+    base = ElasWavePolicy(WORKER_HW).decide(seg, view0)
+    thr0 = w["global_batch"] / base.step_time
+    total_samples = 0.0
+    total_time = 0.0
+    prev_down = None
+    for dur, down in trace:
+        seg, view = build_view(w)
+        kill_nodes(view, down)
+        d = pol.decide(seg, view)
+        thr = w["global_batch"] / d.step_time if d.feasible and \
+            np.isfinite(d.step_time) else 0.0
+        pay = MTTR[pol.name] if prev_down is not None and down != prev_down else 0.0
+        total_samples += thr * max(dur - pay, 0)
+        total_time += dur
+        prev_down = down
+    return total_samples / total_time / thr0
+
+
+def run(verbose=True):
+    rows = []
+    for tname, trace in (("traceA", TRACE_A), ("traceB", TRACE_B)):
+        for wname, w in LLAMA2.items():
+            vals = {}
+            for pol in (ElasWavePolicy(WORKER_HW), ReCyclePolicy(),
+                        TorchFTPolicy()):
+                vals[pol.name] = run_trace(w, trace, pol)
+            rows.append((tname, wname, vals))
+            if verbose:
+                print(f"  {tname} {wname}: " + " ".join(
+                    f"{k}={v:.3f}" for k, v in vals.items()))
+    return rows
+
+
+def main():
+    t0 = time.perf_counter()
+    rows = run()
+    us = (time.perf_counter() - t0) * 1e6 / max(len(rows), 1)
+    gains_re = [r[2]["elaswave"] / max(r[2]["recycle"], 1e-9) for r in rows]
+    gains_tf = [r[2]["elaswave"] / max(r[2]["torchft"], 1e-9) for r in rows]
+    emit("fig14_spot_traces", us,
+         f"vs_recycle={min(gains_re):.2f}-{max(gains_re):.2f}x;"
+         f"vs_torchft={min(gains_tf):.2f}-{max(gains_tf):.2f}x")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Fig. 11 — throughput under fail-stop shrinks (1/2/3 nodes) for the three
+Llama-2 workloads, ElasWave vs ReCycle vs TorchFT."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.policies import ElasWavePolicy, ReCyclePolicy, TorchFTPolicy
+from .common import LLAMA2, WORKER_HW, build_view, kill_nodes, emit
+
+
+def run(verbose: bool = True):
+    rows = []
+    policies = [ElasWavePolicy(WORKER_HW), ReCyclePolicy(), TorchFTPolicy()]
+    for wname, w in LLAMA2.items():
+        seg, view0 = build_view(w)
+        base = ElasWavePolicy(WORKER_HW).decide(seg, view0)
+        thr0 = w["global_batch"] / base.step_time
+        for shrink in (0, 1, 2, 3):
+            for pol in policies:
+                seg, view = build_view(w)
+                kill_nodes(view, shrink)
+                t0 = time.perf_counter()
+                d = pol.decide(seg, view)
+                dt = time.perf_counter() - t0
+                thr = w["global_batch"] / d.step_time if d.feasible and \
+                    np.isfinite(d.step_time) else 0.0
+                rows.append((wname, shrink, pol.name, thr / thr0,
+                             d.feasible, dt))
+                if verbose:
+                    print(f"  {wname} shrink={shrink} {pol.name:9s} "
+                          f"rel_throughput={thr / thr0:.3f} "
+                          f"feasible={d.feasible}")
+    # derived: ElasWave gain over baselines at 1-node shrink on 34B
+    d = {(r[0], r[1], r[2]): r[3] for r in rows}
+    g_re = d[("llama2-34b", 1, "elaswave")] / max(d[("llama2-34b", 1, "recycle")], 1e-9)
+    g_tf = d[("llama2-34b", 1, "elaswave")] / max(d[("llama2-34b", 1, "torchft")], 1e-9)
+    return rows, {"gain_vs_recycle_34b_1node": g_re,
+                  "gain_vs_torchft_34b_1node": g_tf}
+
+
+def main():
+    t0 = time.perf_counter()
+    rows, derived = run(verbose=True)
+    us = (time.perf_counter() - t0) * 1e6 / max(len(rows), 1)
+    emit("fig11_throughput_failstop", us,
+         f"elaswave/recycle={derived['gain_vs_recycle_34b_1node']:.2f}x;"
+         f"elaswave/torchft={derived['gain_vs_torchft_34b_1node']:.2f}x")
+    return derived
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Replay a spot-instance capacity trace against the three recovery policies
+(paper Fig. 14) and print the time-averaged throughput.
+
+    PYTHONPATH=src python examples/spot_trace_replay.py [--model llama2-13b]
+"""
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))  # repo root
+
+from benchmarks.common import LLAMA2
+from benchmarks.spot_trace import TRACE_A, TRACE_B, run_trace
+from benchmarks.common import WORKER_HW
+from repro.core.policies import ElasWavePolicy, ReCyclePolicy, TorchFTPolicy
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--model", default="llama2-13b", choices=list(LLAMA2))
+    args = ap.parse_args()
+    w = LLAMA2[args.model]
+    for tname, trace in (("plateau-heavy (A)", TRACE_A),
+                         ("shrink-heavy (B)", TRACE_B)):
+        print(f"\ntrace {tname}: segments={trace}")
+        for pol in (ElasWavePolicy(WORKER_HW), ReCyclePolicy(),
+                    TorchFTPolicy()):
+            v = run_trace(w, trace, pol)
+            bar = "#" * int(v * 40)
+            print(f"  {pol.name:9s} {v:.3f} {bar}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+"""ElasWave-JAX: elastic-native hybrid-parallel training framework.
+
+Public API:
+  repro.core       - ElasWave planners / engine / fabric / VirtualCluster
+  repro.models     - model zoo + ModelConfig
+  repro.configs    - the 10 assigned architectures
+  repro.parallel   - production-mesh sharding rules
+  repro.optim      - sharded mixed-precision AdamW
+  repro.data       - sample-id-addressed data pipeline
+  repro.kernels    - Pallas TPU kernels (+ oracles)
+  repro.launch     - mesh / dry-run / training launchers
+  repro.checkpoint - cold-restart disk checkpointing
+"""
+
+__version__ = "1.0.0"

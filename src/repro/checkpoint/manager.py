@@ -1,0 +1,113 @@
+"""Disk checkpointing for cold restart (complements the in-memory per-step
+snapshots: warm elastic events never touch disk — see core/fabric).
+
+Format: one .npz per pytree (params / opt state) + a JSON manifest with step,
+config digest, and integrity hashes.  Atomic via write-to-tmp + rename.
+Async flavor: `save(..., blocking=False)` hands the serialized buffers to a
+background thread so the train loop is not stalled (paper §8 related work —
+we keep it minimal since ElasWave's point is to avoid the rollback path).
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import threading
+from pathlib import Path
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+
+    # -------------------------------------------------------------- save --
+    def save(self, step: int, params, opt_state=None, *, blocking=True,
+             extra: Optional[Dict[str, Any]] = None):
+        flats = {"params": _flatten(params)}
+        if opt_state is not None:
+            flats["opt"] = _flatten(opt_state)
+
+        def _write():
+            ckpt = self.dir / f"step_{step:08d}"
+            tmp = self.dir / f".tmp_step_{step:08d}"
+            tmp.mkdir(exist_ok=True)
+            manifest = {"step": step, "arrays": {}, "extra": extra or {}}
+            for name, flat in flats.items():
+                fn = tmp / f"{name}.npz"
+                np.savez(fn, **flat)
+                h = hashlib.sha256(fn.read_bytes()).hexdigest()
+                manifest["arrays"][name] = {"file": f"{name}.npz", "sha256": h}
+            (tmp / "manifest.json").write_text(json.dumps(manifest))
+            if ckpt.exists():
+                import shutil
+                shutil.rmtree(ckpt)
+            os.rename(tmp, ckpt)
+            self._gc()
+
+        if blocking:
+            _write()
+        else:
+            if self._thread is not None:
+                self._thread.join()
+            self._thread = threading.Thread(target=_write, daemon=True)
+            self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        ckpts = sorted(self.dir.glob("step_*"))
+        for c in ckpts[:-self.keep]:
+            import shutil
+            shutil.rmtree(c)
+
+    # ----------------------------------------------------------- restore --
+    def latest_step(self) -> Optional[int]:
+        ckpts = sorted(self.dir.glob("step_*"))
+        return int(ckpts[-1].name.split("_")[1]) if ckpts else None
+
+    def restore(self, step: Optional[int] = None, *, verify: bool = True,
+                ) -> Tuple[int, Dict[str, Dict[str, np.ndarray]], Dict]:
+        step = step if step is not None else self.latest_step()
+        assert step is not None, "no checkpoints"
+        ckpt = self.dir / f"step_{step:08d}"
+        manifest = json.loads((ckpt / "manifest.json").read_text())
+        out = {}
+        for name, meta in manifest["arrays"].items():
+            fn = ckpt / meta["file"]
+            if verify:
+                h = hashlib.sha256(fn.read_bytes()).hexdigest()
+                if h != meta["sha256"]:
+                    raise IOError(f"checkpoint corrupted: {fn}")
+            with np.load(fn) as z:
+                out[name] = {k: z[k] for k in z.files}
+        return manifest["step"], out, manifest.get("extra", {})
+
+    def restore_into(self, tree, flat: Dict[str, np.ndarray]):
+        """Rebuild a pytree with the same structure from flattened arrays."""
+        paths = jax.tree_util.tree_flatten_with_path(tree)[0]
+        leaves = []
+        for path, leaf in paths:
+            key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                           for p in path)
+            leaves.append(flat[key].astype(np.asarray(leaf).dtype))
+        treedef = jax.tree_util.tree_structure(tree)
+        return jax.tree_util.tree_unflatten(treedef, leaves)

@@ -1,0 +1,52 @@
+"""Assigned-architecture configs.  ``get_config(arch_id)`` returns the exact
+published config; ``get_smoke_config(arch_id)`` a reduced same-family config
+for CPU smoke tests."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.models.config import ModelConfig
+
+ARCH_IDS: List[str] = [
+    "internvl2_76b",
+    "mamba2_2p7b",
+    "llama4_scout_17b_a16e",
+    "deepseek_v3_671b",
+    "jamba_1p5_large_398b",
+    "codeqwen1p5_7b",
+    "llama3_405b",
+    "deepseek_67b",
+    "nemotron_4_15b",
+    "whisper_base",
+]
+
+_ALIASES = {
+    "internvl2-76b": "internvl2_76b",
+    "mamba2-2.7b": "mamba2_2p7b",
+    "llama4-scout-17b-a16e": "llama4_scout_17b_a16e",
+    "deepseek-v3-671b": "deepseek_v3_671b",
+    "jamba-1.5-large-398b": "jamba_1p5_large_398b",
+    "codeqwen1.5-7b": "codeqwen1p5_7b",
+    "llama3-405b": "llama3_405b",
+    "deepseek-67b": "deepseek_67b",
+    "nemotron-4-15b": "nemotron_4_15b",
+    "whisper-base": "whisper_base",
+}
+
+
+def _module(arch_id: str):
+    arch_id = _ALIASES.get(arch_id, arch_id)
+    return importlib.import_module(f"repro.configs.{arch_id}")
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    return _module(arch_id).config()
+
+
+def get_smoke_config(arch_id: str) -> ModelConfig:
+    return _module(arch_id).smoke_config()
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}

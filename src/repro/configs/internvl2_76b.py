@@ -1,0 +1,28 @@
+"""internvl2-76b [vlm] — InternViT + InternLM2 backbone (arXiv:2404.16821).
+
+Backbone-only per assignment: the vision frontend is a STUB; input_specs
+provides precomputed patch embeddings ([B, 256, d]) prepended to tokens.
+long_500k skipped: pure full attention (see DESIGN.md §4).
+"""
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="internvl2-76b", family="vlm",
+        num_layers=80, d_model=8192, num_heads=64, num_kv_heads=8,
+        d_ff=28672, vocab_size=128256,
+        frontend_embeds=256,
+        skip_shapes=(("long_500k", "pure full attention; 524k KV quadratic "
+                      "cost unsupportable without an approximation the paper "
+                      "does not claim"),),
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="internvl2-76b-smoke", family="vlm",
+        num_layers=4, d_model=128, num_heads=8, num_kv_heads=2,
+        d_ff=256, vocab_size=512, frontend_embeds=8,
+        rope_theta=10000.0, dtype="float32",
+    )

@@ -1,0 +1,30 @@
+"""whisper-base [audio] — encoder-decoder, conv frontend STUB
+(arXiv:2212.04356).  input_specs provides precomputed frame embeddings
+[B, 1500, 512].
+
+Notes: decode shapes exercise the decoder with a 32k-position KV cache as
+assigned (beyond the model's trained 448 positions — honored as the assigned
+shape, noted in DESIGN.md).  long_500k skipped: full attention.
+"""
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-base", family="audio",
+        num_layers=6, d_model=512, num_heads=8, num_kv_heads=8,
+        d_ff=2048, vocab_size=51865,
+        is_encdec=True, encoder_layers=6, decoder_layers=6,
+        max_source_positions=1500, activation="gelu",
+        skip_shapes=(("long_500k", "full attention enc-dec; see DESIGN.md §4"),),
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-smoke", family="audio",
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=4,
+        d_ff=128, vocab_size=512,
+        is_encdec=True, encoder_layers=2, decoder_layers=2,
+        max_source_positions=32, activation="gelu", dtype="float32",
+    )

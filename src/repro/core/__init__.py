@@ -1,0 +1,7 @@
+"""ElasWave core: multi-dimensional elastic scheduling + data plane."""
+from .events import ElasticEvent, EventKind
+from .cost_model import HardwareSpec, SegmentCosts, mini_step_time
+from .engine import ScheduleEngine, RecoveryPlan
+from .cluster import VirtualCluster
+from .communicator import DynamicCommunicator, build_hybrid_groups
+from . import zero, migration, pipeline, policies

@@ -1,0 +1,75 @@
+"""ElasWave Agent (paper §3.2): per-worker health monitoring.
+
+Co-located with each (virtual) worker; hooks heartbeat/step-time probes and
+relays elastic events to the Core.  Fail-stop: missed heartbeats.  Fail-slow:
+step-time z-score over a rolling window against the stage's peer median.
+Scheduler signals (scale in/out) are injected directly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .events import ElasticEvent, EventKind
+
+
+@dataclasses.dataclass
+class Probe:
+    step: int
+    rank: int
+    heartbeat: bool
+    step_seconds: float
+    mem_used: float = 0.0
+
+
+class Agent:
+    def __init__(self, num_ranks: int, window: int = 8,
+                 slow_threshold: float = 1.3, miss_limit: int = 2):
+        self.num_ranks = num_ranks
+        self.window = window
+        self.slow_threshold = slow_threshold
+        self.miss_limit = miss_limit
+        self.misses: Dict[int, int] = {r: 0 for r in range(num_ranks)}
+        self.times: Dict[int, Deque[float]] = {
+            r: deque(maxlen=window) for r in range(num_ranks)}
+        self.reported_slow: set = set()
+        self.reported_dead: set = set()
+
+    def observe(self, probes: List[Probe]) -> List[ElasticEvent]:
+        events: List[ElasticEvent] = []
+        step = probes[0].step if probes else 0
+        seen = set()
+        for p in probes:
+            seen.add(p.rank)
+            if not p.heartbeat:
+                self.misses[p.rank] += 1
+            else:
+                self.misses[p.rank] = 0
+                self.times[p.rank].append(p.step_seconds)
+        for r in range(self.num_ranks):
+            if r not in seen:
+                self.misses[r] = self.misses.get(r, 0) + 1
+            if self.misses[r] >= self.miss_limit and r not in self.reported_dead:
+                self.reported_dead.add(r)
+                events.append(ElasticEvent(EventKind.FAIL_STOP, step, (r,),
+                                           detail=f"{self.misses[r]} missed heartbeats"))
+        # fail-slow: compare each rank's median to the global median
+        med_all = np.median([t for d in self.times.values() for t in d]) \
+            if any(self.times.values()) else 0.0
+        for r, d in self.times.items():
+            if len(d) < self.window // 2 or r in self.reported_dead:
+                continue
+            m = np.median(d)
+            if med_all > 0 and m > self.slow_threshold * med_all \
+                    and r not in self.reported_slow:
+                self.reported_slow.add(r)
+                events.append(ElasticEvent(
+                    EventKind.FAIL_SLOW, step, (r,), slow_factor=float(m / med_all),
+                    detail=f"median {m:.3f}s vs fleet {med_all:.3f}s"))
+        return events
+
+    def clear_slow(self, rank: int):
+        self.reported_slow.discard(rank)

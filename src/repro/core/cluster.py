@@ -1,0 +1,675 @@
+"""VirtualCluster — the executable embodiment of ElasWave.
+
+An in-process cluster of virtual workers arranged as a DP x PP grid.  Every
+paper mechanism operates on REAL state with REAL numerics:
+
+* per-layer parameters owned by pipeline stages (migratable pytrees);
+* ZeRO-1 optimizer shards per (stage, dp-rank) under contiguous or
+  interleaved layouts (core/zero.py);
+* per-step ring snapshots to host memory (core/fabric/snapshot.py);
+* live remap on shrink (core/fabric/remap.py) — actual array movement,
+  integrity-checked;
+* dynamic communicator group edits (core/communicator.py);
+* dataflow resizing with exact gradient weighting (planners/dataflow.py);
+* content-addressed RNG (= RNG resharding) vs a deliberately rank-addressed
+  "naive" mode for the §7.5 ablation;
+* DVFS / fail-slow factors feed the 1F1B timing simulator.
+
+Gradients are computed with jax.grad over the *full* model per micro-batch
+slice (the logically-centralized equivalent of the pipeline's math), so the
+elastic run's loss trajectory can be compared bit-for-bit-ish against a
+fault-free run.  The distribution layer (who owns what, what moves on which
+event, what it costs) is exactly the paper's; see DESIGN.md §3.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time as _time
+from functools import partial
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.flatten_util import ravel_pytree
+
+from repro.data.pipeline import GlobalBatchSampler, make_batch
+from repro.models import registry as R
+from repro.models.config import ModelConfig
+from repro.models.layers import RngCtx
+from repro.optim.adam import AdamConfig, adam_update_flat
+from . import zero
+from .agent import Agent, Probe
+from .communicator import DynamicCommunicator, build_hybrid_groups
+from .cost_model import HardwareSpec, SegmentCosts
+from .engine import RecoveryPlan, ScheduleEngine
+from .events import ElasticEvent, EventKind
+from .fabric.remap import LiveRemap, RemapPlan
+from .fabric.snapshot import SnapshotPool
+from .migration import MigrationSpec, migration_timing
+from .pipeline import StageTiming, simulate_1f1b
+
+
+STEM = -1      # pseudo layer ids for stage state-space entries
+HEAD = -2
+
+
+@dataclasses.dataclass
+class StageState:
+    """Optimizer state of one pipeline stage, ZeRO-1 sharded over its DP group."""
+    entries: List[int]                       # [STEM?] + layer ids + [HEAD?]
+    sizes: List[int]                         # element count per entry
+    layout_kind: str
+    dp_ranks: List[int]                      # surviving dp indices of this group
+    # shards[dp_rank] = {"master": flat fp32 over owned intervals, "mu", "nu"}
+    shards: Dict[int, Dict[str, np.ndarray]]
+
+    def layout(self) -> zero.Layout:
+        return zero.Layout(self.layout_kind, tuple(self.sizes), len(self.dp_ranks))
+
+    @property
+    def total(self) -> int:
+        return sum(self.sizes)
+
+
+class VirtualCluster:
+    def __init__(self, cfg: ModelConfig, dp: int, pp: int, *,
+                 global_batch: int, num_micro: int, seq_len: int,
+                 seed: int = 0, zero_layout: str = "interleaved",
+                 adam: Optional[AdamConfig] = None,
+                 rng_mode: str = "reshard",        # "reshard" | "naive"
+                 hw: Optional[HardwareSpec] = None,
+                 mem_cap: Optional[float] = None,
+                 snapshot_enabled: bool = True,
+                 non_blocking_migration: bool = True):
+        assert global_batch % num_micro == 0
+        assert (global_batch // num_micro) % dp == 0, "initial even split"
+        self.cfg = cfg
+        self.dp0, self.pp = dp, pp
+        self.global_batch, self.num_micro, self.seq = global_batch, num_micro, seq_len
+        self.adam = adam or AdamConfig(master_weights=True)
+        self.rng_mode = rng_mode
+        self.hw = hw or HardwareSpec()
+        self.zero_layout = zero_layout
+        self.snapshot_enabled = snapshot_enabled
+        self.non_blocking_migration = non_blocking_migration
+        self.sampler = GlobalBatchSampler(global_batch, seed)
+        self.base_key = jax.random.key(seed)
+
+        # ---- model state (fp32 for deterministic CPU math) ----
+        L = cfg.num_layers
+        key = jax.random.key(seed + 1)
+        ks = jax.random.split(key, L + 2)
+        self.stem = R.init_stem(ks[0], cfg)
+        self.layer_params: List[Any] = [R.init_layer(ks[1 + i], cfg, i)
+                                        for i in range(L)]
+        self.head = R.init_head(ks[L + 1], cfg)
+        self._unravel = {}
+        # balanced initial layer assignment
+        per = L // pp
+        rem = L % pp
+        ranges, a = [], 0
+        for p in range(pp):
+            b = a + per + (1 if p < rem else 0) - 1
+            ranges.append((a, b))
+            a = b + 1
+        self.layer_assignment: List[Tuple[int, int]] = ranges
+
+        # ---- workers / health ----
+        self.alive = np.ones((dp, pp), dtype=bool)
+        self.freq = np.ones((dp, pp))
+        self.slow = np.ones((dp, pp))
+
+        # ---- ZeRO stage states + snapshots ----
+        self.stages: List[StageState] = []
+        self.snapshots: List[SnapshotPool] = []
+        for p in range(pp):
+            st = self._build_stage_state(p, list(range(dp)))
+            self.stages.append(st)
+            pool = SnapshotPool(dp, self.adam)
+            if snapshot_enabled:
+                pool.bootstrap(0, [st.shards[r] for r in st.dp_ranks])
+            self.snapshots.append(pool)
+
+        # ---- control plane ----
+        self.comm = DynamicCommunicator(build_hybrid_groups(dp, pp))
+        self.agent = Agent(dp * pp)
+        self.engine = ScheduleEngine(cfg, seq_len, self.hw, mem_cap)
+        self.remapper = LiveRemap()
+
+        # ---- bookkeeping ----
+        self.step_count = 0
+        self.opt_step = 0
+        self.per_rank_mbs: List[int] = [global_batch // num_micro // dp] * dp
+        self.grad_weights: List[float] = [1.0 / dp] * dp
+        self.losses: List[float] = []
+        self.recoveries: List[Dict[str, float]] = []
+        self.seg = SegmentCosts.build(cfg, seq_len, self.hw)
+        self._grad_fn_cache: Dict[int, Any] = {}
+
+    # ------------------------------------------------------------------
+    # state-space helpers
+    # ------------------------------------------------------------------
+    def _entry_vec(self, entry: int) -> np.ndarray:
+        if entry == STEM:
+            v, unr = ravel_pytree(self.stem)
+        elif entry == HEAD:
+            v, unr = ravel_pytree(self.head)
+        else:
+            v, unr = ravel_pytree(self.layer_params[entry])
+        self._unravel[entry] = unr
+        return np.asarray(v, dtype=np.float32)
+
+    def _stage_entries(self, p: int) -> List[int]:
+        a, b = self.layer_assignment[p]
+        entries = list(range(a, b + 1))
+        if p == 0:
+            entries = [STEM] + entries
+        if p == self.pp - 1:
+            entries = entries + [HEAD]
+        return entries
+
+    def _build_stage_state(self, p: int, dp_ranks: List[int]) -> StageState:
+        entries = self._stage_entries(p)
+        vecs = [self._entry_vec(e) for e in entries]
+        sizes = [v.size for v in vecs]
+        full = np.concatenate(vecs) if vecs else np.zeros(0, np.float32)
+        st = StageState(entries, sizes, self.zero_layout, list(dp_ranks), {})
+        lay = st.layout()
+        for j, r in enumerate(st.dp_ranks):
+            ivs = lay.owner_intervals(j)
+            master = np.concatenate([full[s:e] for s, e in ivs]) if ivs else \
+                np.zeros(0, np.float32)
+            st.shards[r] = {"master": master,
+                            "mu": np.zeros_like(master),
+                            "nu": np.zeros_like(master)}
+        return st
+
+    def _stage_full_vec(self, st: StageState, comp: str = "master") -> np.ndarray:
+        """All-gather equivalent: reassemble the stage's full state vector."""
+        full = np.zeros(st.total, dtype=np.float32)
+        lay = st.layout()
+        for j, r in enumerate(st.dp_ranks):
+            off = 0
+            for s, e in lay.owner_intervals(j):
+                n = e - s
+                full[s:e] = st.shards[r][comp][off:off + n]
+                off += n
+        return full
+
+    def _write_params_from_masters(self):
+        for p, st in enumerate(self.stages):
+            full = self._stage_full_vec(st)
+            off = 0
+            for e, sz in zip(st.entries, st.sizes):
+                vec = jnp.asarray(full[off:off + sz])
+                tree = self._unravel[e](vec)
+                if e == STEM:
+                    self.stem = tree
+                elif e == HEAD:
+                    self.head = tree
+                else:
+                    self.layer_params[e] = tree
+                off += sz
+
+    # ------------------------------------------------------------------
+    # training math
+    # ------------------------------------------------------------------
+    def _loss_fn(self, stem, layers, head, tokens, labels, step_key, sample_ids):
+        cfg = self.cfg
+        x = R.apply_stem(stem, cfg, tokens)
+        B, S, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+        ctx = RngCtx(step_key=step_key, sample_ids=sample_ids,
+                     deterministic=cfg.dropout_rate <= 0.0)
+        aux_total = jnp.zeros((), jnp.float32)
+        for lid in range(cfg.num_layers):
+            x, aux = R.apply_layer(layers[lid], cfg, lid, x, positions, ctx)
+            aux_total = aux_total + aux
+        logits = R.apply_head(head, cfg, x)
+        from repro.models.transformer import softmax_xent
+        return softmax_xent(logits[:, :-1], labels[:, 1:]) + aux_total
+
+    def _grad_fn(self, batch_size: int):
+        if batch_size not in self._grad_fn_cache:
+            self._grad_fn_cache[batch_size] = jax.jit(
+                jax.value_and_grad(self._loss_fn, argnums=(0, 1, 2)))
+        return self._grad_fn_cache[batch_size]
+
+    def _micro_grads(self, step: int) -> Tuple[float, Any]:
+        """Weighted accumulation over micro-batches and DP slices — the
+        numerics of dataflow-resized hybrid-parallel training."""
+        ids_by_rank = self.sampler.partition(step, self.per_rank_mbs,
+                                             self.num_micro)
+        step_key = jax.random.fold_in(self.base_key, step)
+        total_loss = 0.0
+        acc = None
+        for m in range(self.num_micro):
+            for r, rank_ids in enumerate(ids_by_rank):
+                ids = rank_ids[m]
+                if len(ids) == 0:
+                    continue
+                batch = make_batch(ids, self.seq, self.cfg.vocab_size)
+                if self.rng_mode == "reshard":
+                    sids = batch["sample_ids"]
+                else:   # naive: rank-addressed streams (the paper's "w/o")
+                    sids = jnp.arange(len(ids)) + r * 100003
+                loss, grads = self._grad_fn(len(ids))(
+                    self.stem, self.layer_params, self.head,
+                    batch["tokens"], batch["labels"], step_key, sids)
+                w = self.grad_weights[r] / self.num_micro
+                total_loss += float(loss) * w
+                gs = jax.tree.map(lambda g: g * w, grads)
+                acc = gs if acc is None else jax.tree.map(jnp.add, acc, gs)
+        return total_loss, acc
+
+    def train_step(self) -> float:
+        step = self.step_count
+        loss, (g_stem, g_layers, g_head) = self._micro_grads(step)
+        self.opt_step += 1
+        grad_shard_by_stage: List[List[np.ndarray]] = []
+        for p, st in enumerate(self.stages):
+            # assemble this stage's full gradient vector
+            parts = []
+            for e in st.entries:
+                if e == STEM:
+                    parts.append(np.asarray(ravel_pytree(g_stem)[0], np.float32))
+                elif e == HEAD:
+                    parts.append(np.asarray(ravel_pytree(g_head)[0], np.float32))
+                else:
+                    parts.append(np.asarray(ravel_pytree(g_layers[e])[0], np.float32))
+            gfull = np.concatenate(parts) if parts else np.zeros(0, np.float32)
+            lay = st.layout()
+            shards = []
+            for j, r in enumerate(st.dp_ranks):
+                gs = np.concatenate([gfull[s:e] for s, e in lay.owner_intervals(j)]) \
+                    if st.total else np.zeros(0, np.float32)
+                newm, newst = adam_update_flat(
+                    jnp.asarray(gs),
+                    {k: jnp.asarray(v) for k, v in st.shards[r].items()},
+                    self.opt_step, self.adam)
+                st.shards[r] = {k: np.asarray(v) for k, v in newst.items()}
+                shards.append(gs)
+            grad_shard_by_stage.append(shards)
+        self._write_params_from_masters()
+        if self.snapshot_enabled:
+            for p, st in enumerate(self.stages):
+                self.snapshots[p].snapshot_step(step, grad_shard_by_stage[p],
+                                                self.opt_step)
+        self.step_count += 1
+        self.losses.append(loss)
+        return loss
+
+    # ------------------------------------------------------------------
+    # timing model (feeds throughput benchmarks)
+    # ------------------------------------------------------------------
+    def simulate_step_time(self) -> float:
+        stages = []
+        per_micro = self.global_batch // self.num_micro
+        for p, (a, b) in enumerate(self.layer_assignment):
+            live = [d for d in range(self.dp0) if self.alive[d, p]]
+            width = max(len(live), 1)
+            mbs = -(-per_micro // width)
+            worst = max((self.slow[d, p] / self.freq[d, p] for d in live),
+                        default=1.0)
+            eff = self.hw.peak_flops * self.hw.mfu / worst
+            fl = self.seg.seg_fwd_flops(a, b, mbs)
+            stages.append(StageTiming(fl / eff, 2 * fl / eff, self.num_micro))
+        return simulate_1f1b(stages).step_time
+
+    # ------------------------------------------------------------------
+    # elasticity
+    # ------------------------------------------------------------------
+    def inject_fail_stop(self, d: int, p: int):
+        self.alive[d, p] = False
+
+    def inject_fail_slow(self, d: int, p: int, factor: float):
+        self.slow[d, p] = factor
+
+    def detect_and_recover(self) -> Optional[Dict[str, float]]:
+        """Agent probes -> events -> ScheduleEngine plan -> executor."""
+        probes = []
+        base_t = self.simulate_step_time()
+        for d in range(self.dp0):
+            for p in range(self.pp):
+                rank = d * self.pp + p
+                probes.append(Probe(self.step_count, rank,
+                                    heartbeat=bool(self.alive[d, p]),
+                                    step_seconds=base_t * self.slow[d, p]))
+        events: List[ElasticEvent] = []
+        for _ in range(self.agent.miss_limit):
+            events = self.agent.observe(probes)
+            if events:
+                break
+        if not events:
+            return None
+        ev = events[0]
+        return self.apply_event(ev)
+
+    def apply_event(self, ev: ElasticEvent) -> Dict[str, float]:
+        t_detect = 0.5  # heartbeat interval bound (modeled)
+        rank = ev.ranks[0]
+        d, p = rank // self.pp, rank % self.pp
+        if ev.kind in (EventKind.FAIL_STOP, EventKind.SCALE_IN):
+            return self.recover_fail_stop(d, p, t_detect=t_detect)
+        if ev.kind == EventKind.FAIL_SLOW:
+            return self.recover_fail_slow(d, p, ev.slow_factor)
+        if ev.kind == EventKind.SCALE_OUT:
+            return self.recover_scale_out(d, p)
+        raise ValueError(f"unknown elastic event kind: {ev.kind}")
+
+    def recover_fail_stop(self, d: int, p: int, t_detect: float = 0.5,
+                          ) -> Dict[str, float]:
+        """Full ElasWave recovery: plan + communicator edit + live remap +
+        layer migration + dataflow/DVFS/RNG application."""
+        self.alive[d, p] = False
+        st = self.stages[p]
+        # --- plan (engine) ---
+        old_sample_rank = self._current_sample_assignment()
+        widths = [int(self.alive[:, q].sum()) for q in range(self.pp)]
+        plan = self.engine.plan(
+            ElasticEvent(EventKind.FAIL_STOP, self.step_count, (d * self.pp + p,)),
+            dp=len(st.dp_ranks), pp=self.pp,
+            global_batch=self.global_batch, num_micro=self.num_micro,
+            layer_assignment=self.layer_assignment,
+            failed_dp_ranks=[d], old_sample_rank=old_sample_rank,
+            stage_widths=widths)
+
+        # --- communicator: in-place edit ---
+        comm_stats = self.comm.edit(remove=[d * self.pp + p])
+
+        # --- live remap of stage p's optimizer state ---
+        t_remap, remap_plan = self._live_remap_stage(p, failed=[d])
+
+        # --- layer migrations (graph plan) ---
+        t_migr = 0.0
+        if plan.graph.feasible and plan.migrations:
+            t_migr = self._apply_migrations(plan.migrations,
+                                            list(plan.graph.stage_ranges))
+
+        # --- dataflow: resize micro batches over surviving width ---
+        self._apply_dataflow()
+
+        # --- DVFS ---
+        for dv in plan.dvfs:
+            if dv.rank >= 0:
+                for dd in range(self.dp0):
+                    if self.alive[dd, dv.rank]:
+                        self.freq[dd, dv.rank] = max(self.freq[dd, dv.rank], dv.freq)
+
+        rec = {"detect": t_detect, "plan": plan.plan_seconds,
+               "communicator": comm_stats.seconds, "remap": t_remap,
+               "migration": t_migr,
+               "total": t_detect + plan.plan_seconds + comm_stats.seconds
+               + t_remap + t_migr}
+        rec["rng_moves"] = len(plan.rng.layer_stream_moves) + \
+            len(plan.rng.sample_stream_moves)
+        self.recoveries.append(rec)
+        return rec
+
+    def recover_scale_out(self, d: int, p: int) -> Dict[str, float]:
+        """Worker (d, p) (re)joins: communicator edit (only the new member's
+        links), reverse live-remap widening the stage's ZeRO group, dataflow
+        resize back to the wider DP width (paper Fig. 8 scale-up)."""
+        assert not self.alive[d, p], "worker already alive"
+        self.alive[d, p] = True
+        comm_stats = self.comm.edit(add=[(g, d * self.pp + p)
+                                         for g in self.comm.groups
+                                         if g == f"dp_stage{p}_tp0"])
+        t_remap = self._widen_stage(p, joining=[d])
+        self._apply_dataflow()
+        rec = {"detect": 0.0, "plan": 0.0, "communicator": comm_stats.seconds,
+               "remap": t_remap, "migration": 0.0,
+               "total": comm_stats.seconds + t_remap}
+        self.recoveries.append(rec)
+        return rec
+
+    def _widen_stage(self, p: int, joining: List[int]) -> float:
+        """Reverse remap: redistribute the stage state over a WIDER group.
+        Sources: current owners' device shards; targets: new layout."""
+        st = self.stages[p]
+        old_ranks = list(st.dp_ranks)
+        old_lay = st.layout()
+        new_ranks = old_ranks + [j for j in joining if j not in old_ranks]
+        pre = {c: self._stage_full_vec(st, c) for c in ("master", "mu", "nu")}
+        device_parts = {r: old_lay.owner_intervals(old_ranks.index(r))
+                        for r in old_ranks}
+        new_lay = zero.Layout(st.layout_kind, tuple(st.sizes), len(new_ranks))
+        target_parts = {r: new_lay.owner_intervals(j)
+                        for j, r in enumerate(new_ranks)}
+        plan = self.remapper.compute_plan(st.total, device_parts, {},
+                                          target_parts)
+        new_shards: Dict[int, Dict[str, np.ndarray]] = {r: {} for r in new_ranks}
+        for comp in ("master", "mu", "nu"):
+            device_data = {}
+            for r in old_ranks:
+                ivs = old_lay.owner_intervals(old_ranks.index(r))
+                segs, off = {}, 0
+                for s, e in ivs:
+                    segs[(s, e)] = st.shards[r][comp][off:off + (e - s)]
+                    off += e - s
+                device_data[r] = segs
+            assembled = self.remapper.execute(plan, st.total, device_data, {})
+            for r in new_ranks:
+                new_shards[r][comp] = assembled.get(r, np.zeros(0, np.float32))
+        st.dp_ranks = new_ranks
+        st.shards = new_shards
+        for comp in ("master", "mu", "nu"):
+            post = self._stage_full_vec(st, comp)
+            assert np.array_equal(post, pre[comp]), f"widen corrupted {comp}"
+        self.snapshots[p] = SnapshotPool(len(new_ranks), self.adam)
+        if self.snapshot_enabled:
+            self.snapshots[p].bootstrap(self.step_count,
+                                        [st.shards[r] for r in new_ranks])
+        return plan.est_seconds
+
+    def recover_fail_slow(self, d: int, p: int, factor: float) -> Dict[str, float]:
+        """Straggler mitigation: rebalance layers away from the slow stage +
+        DVFS top-up (no state loss)."""
+        self.slow[d, p] = max(self.slow[d, p], factor)
+        per_micro = self.global_batch // self.num_micro
+
+        def t(pp_, a, b):
+            live = [dd for dd in range(self.dp0) if self.alive[dd, pp_]]
+            width = max(len(live), 1)
+            mbs = -(-per_micro // width)
+            worst = max((self.slow[dd, pp_] for dd in live), default=1.0)
+            fl = self.seg.seg_fwd_flops(a, b, mbs)
+            return 3 * fl / (self.hw.peak_flops * self.hw.mfu / worst)
+
+        def mem(pp_, a, b):
+            return self.seg.seg_mem(a, b, per_micro, inflight=self.pp)
+
+        from .planners.graph import minimax_layer_partition
+        plan = minimax_layer_partition(self.cfg.num_layers, self.pp, t, mem,
+                                       [self.engine.mem_cap] * self.pp)
+        t_migr = 0.0
+        if plan.feasible:
+            old_stage = _stage_of(self.layer_assignment, self.cfg.num_layers)
+            new_stage = _stage_of(plan.stage_ranges, self.cfg.num_layers)
+            moves = [(lid, old_stage[lid], new_stage[lid])
+                     for lid in range(self.cfg.num_layers)
+                     if old_stage[lid] != new_stage[lid]]
+            if moves:
+                t_migr = self._apply_migrations(moves, list(plan.stage_ranges))
+        rec = {"detect": 0.5, "plan": 0.0, "communicator": 0.0,
+               "remap": 0.0, "migration": t_migr, "total": 0.5 + t_migr}
+        self.recoveries.append(rec)
+        return rec
+
+    # ------------------------------------------------------------------
+    # executor pieces
+    # ------------------------------------------------------------------
+    def _current_sample_assignment(self) -> Dict[int, int]:
+        out, cursor = {}, 0
+        for r, sz in enumerate(self.per_rank_mbs):
+            for _ in range(sz):
+                out[cursor] = r
+                cursor += 1
+        return out
+
+    def _apply_dataflow(self):
+        # width of the narrowest stage defines surviving DP for data entry
+        widths = [int(self.alive[:, p].sum()) for p in range(self.pp)]
+        new_dp = max(min(widths), 1)
+        from .planners.dataflow import plan_dataflow
+        df = plan_dataflow(self.global_batch, self.num_micro, new_dp)
+        self.per_rank_mbs = list(df.micro_batch_sizes)
+        self.grad_weights = list(df.grad_weights)
+
+    def _live_remap_stage(self, p: int, failed: List[int],
+                          ) -> Tuple[float, RemapPlan]:
+        st = self.stages[p]
+        pool = self.snapshots[p]
+        old_lay = st.layout()
+        old_ranks = list(st.dp_ranks)
+        # record pre-failure full vectors for verification
+        pre = {c: self._stage_full_vec_with_snapshots(p, c, failed)
+               for c in ("master", "mu", "nu")}
+
+        surviving = [r for r in old_ranks if r not in failed]
+        device_parts = {r: old_lay.owner_intervals(old_ranks.index(r))
+                        for r in surviving}
+        host_parts = {}
+        for f in failed:
+            holder = pool.holder_of(old_ranks.index(f))
+            holder_rank = old_ranks[holder]
+            if holder_rank in surviving and pool.host[holder] is not None:
+                host_parts[f] = old_lay.owner_intervals(old_ranks.index(f))
+        new_lay = zero.Layout(st.layout_kind, tuple(st.sizes), len(surviving))
+        target_parts = {r: new_lay.owner_intervals(j)
+                        for j, r in enumerate(surviving)}
+
+        plan = self.remapper.compute_plan(st.total, device_parts, host_parts,
+                                          target_parts)
+        # execute with real arrays, per component
+        new_shards: Dict[int, Dict[str, np.ndarray]] = {r: {} for r in surviving}
+        for comp in ("master", "mu", "nu"):
+            device_data = {}
+            for r in surviving:
+                ivs = old_lay.owner_intervals(old_ranks.index(r))
+                segs, off = {}, 0
+                for s, e in ivs:
+                    segs[(s, e)] = st.shards[r][comp][off:off + (e - s)]
+                    off += e - s
+                device_data[r] = segs
+            host_data = {}
+            for f in failed:
+                holder = pool.holder_of(old_ranks.index(f))
+                snap = pool.host[holder]
+                if snap is None:
+                    continue
+                ivs = old_lay.owner_intervals(old_ranks.index(f))
+                segs, off = {}, 0
+                for s, e in ivs:
+                    segs[(s, e)] = snap[comp][off:off + (e - s)]
+                    off += e - s
+                host_data[f] = segs
+            assembled = self.remapper.execute(plan, st.total, device_data,
+                                              host_data)
+            for r in surviving:
+                new_shards[r][comp] = assembled.get(r, np.zeros(0, np.float32))
+        st.dp_ranks = surviving
+        st.shards = new_shards
+        # verification (paper: online verification before resume)
+        for comp in ("master", "mu", "nu"):
+            post = self._stage_full_vec(st, comp)
+            assert np.array_equal(post, pre[comp]), f"remap corrupted {comp}"
+        # rebuild ring snapshot pool for the shrunken group
+        self.snapshots[p] = SnapshotPool(len(surviving), self.adam)
+        if self.snapshot_enabled:
+            self.snapshots[p].bootstrap(self.step_count,
+                                        [st.shards[r] for r in surviving])
+        return plan.est_seconds, plan
+
+    def _stage_full_vec_with_snapshots(self, p: int, comp: str,
+                                       failed: List[int]) -> np.ndarray:
+        """Pre-failure ground truth: survivors' device state + failed ranks'
+        snapshot state."""
+        st = self.stages[p]
+        pool = self.snapshots[p]
+        full = np.zeros(st.total, dtype=np.float32)
+        lay = st.layout()
+        for j, r in enumerate(st.dp_ranks):
+            src = st.shards[r][comp] if r not in failed else None
+            if src is None:
+                snap = pool.host[pool.holder_of(j)]
+                src = snap[comp] if snap is not None else None
+            if src is None:
+                continue
+            off = 0
+            for s, e in lay.owner_intervals(j):
+                full[s:e] = src[off:off + (e - s)]
+                off += e - s
+        return full
+
+    def _apply_migrations(self, moves: List[Tuple[int, int, int]],
+                          new_ranges: List[Tuple[int, int]]) -> float:
+        """Move layers between stages: optimizer-state slices (per layout) +
+        parameter ownership.  Returns modeled stall seconds (MTTR)."""
+        total_stall = 0.0
+        # compute per-move timing with the migration model
+        step_window = self.simulate_step_time()
+        for (lid, src, dst) in moves:
+            st_src = self.stages[src]
+            pos = st_src.entries.index(lid)
+            pbytes = int(self.seg.param_bytes[lid])
+            obytes = int(self.seg.opt_bytes[lid])
+            spec = MigrationSpec((lid,), src, dst, pbytes, obytes,
+                                 dp=len(st_src.dp_ranks),
+                                 zero_layout=self.zero_layout,
+                                 blocking=not self.non_blocking_migration)
+            timing = migration_timing(spec, self.hw.link_bw, step_window)
+            total_stall += timing.stall_seconds
+        # state movement: rebuild both stage states from the new assignment
+        # (real arrays; correctness asserted by reconstructing masters)
+        pre_masters = {e: self._entry_from_stage(e) for st in self.stages
+                       for e in st.entries}
+        self.layer_assignment = list(new_ranges)
+        for p in range(self.pp):
+            st_old = self.stages[p]
+            survivors = list(st_old.dp_ranks)
+            entries = self._stage_entries(p)
+            vec_parts = [pre_masters[e] for e in entries]
+            sizes = [v["master"].size for v in vec_parts]
+            new_st = StageState(entries, sizes, self.zero_layout, survivors, {})
+            lay = new_st.layout()
+            for comp in ("master", "mu", "nu"):
+                full = np.concatenate([v[comp] for v in vec_parts]) if vec_parts \
+                    else np.zeros(0, np.float32)
+                for j, r in enumerate(survivors):
+                    shard = np.concatenate([full[s:e]
+                                            for s, e in lay.owner_intervals(j)]) \
+                        if new_st.total else np.zeros(0, np.float32)
+                    new_st.shards.setdefault(r, {})[comp] = shard
+            self.stages[p] = new_st
+            self.snapshots[p] = SnapshotPool(len(survivors), self.adam)
+            if self.snapshot_enabled:
+                self.snapshots[p].bootstrap(self.step_count,
+                                            [new_st.shards[r] for r in survivors])
+        return total_stall
+
+    def _entry_from_stage(self, e: int) -> Dict[str, np.ndarray]:
+        for st in self.stages:
+            if e in st.entries:
+                pos = st.entries.index(e)
+                iv = st.layout().layer_interval(pos) if st.layout_kind == "interleaved" \
+                    else (sum(st.sizes[:pos]), sum(st.sizes[:pos + 1]))
+                out = {}
+                for comp in ("master", "mu", "nu"):
+                    full = self._stage_full_vec(st, comp)
+                    out[comp] = full[iv[0]:iv[1]]
+                return out
+        raise KeyError(e)
+
+    # convenience ------------------------------------------------------
+    def run(self, steps: int) -> List[float]:
+        return [self.train_step() for _ in range(steps)]
+
+
+def _stage_of(ranges: Sequence[Tuple[int, int]], L: int) -> List[int]:
+    out = [0] * L
+    for p, (a, b) in enumerate(ranges):
+        for l in range(a, b + 1):
+            out[l] = p
+    return out

@@ -1,0 +1,26 @@
+"""Elastic events (paper §3.1): fail-stop, fail-slow, scheduler scale signals."""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Optional, Tuple
+
+
+class EventKind(enum.Enum):
+    FAIL_STOP = "fail_stop"
+    FAIL_SLOW = "fail_slow"
+    SCALE_IN = "scale_in"       # scheduler-driven preemption
+    SCALE_OUT = "scale_out"     # new resources granted
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticEvent:
+    kind: EventKind
+    step: int
+    ranks: Tuple[int, ...]                 # affected global ranks
+    slow_factor: float = 1.0               # >1 for FAIL_SLOW (time multiplier)
+    detail: str = ""
+
+    @property
+    def is_shrink(self) -> bool:
+        return self.kind in (EventKind.FAIL_STOP, EventKind.SCALE_IN)

@@ -1,0 +1,2 @@
+from .snapshot import SnapshotPool
+from .remap import LiveRemap, RemapPlan, IntegrityError

@@ -1,0 +1,230 @@
+"""Recovery policies: ElasWave (ours) + the paper's two baselines.
+
+All three consume the same ClusterView and produce a ThroughputDecision the
+pipeline simulator can evaluate, so Fig. 11/12a/14 comparisons are
+apples-to-apples.
+
+* **TorchFTPolicy** — DP-replica granularity: a failure drops the entire DP
+  replica (pipeline) containing the failed rank; remaining replicas re-split
+  the global batch.  Wastes the failed replica's surviving ranks.
+* **ReCyclePolicy** — keep the layout; reroute the failed rank's micro-batches
+  to same-stage peers in other DP replicas (decoupled-backward bubbles absorb
+  some of it).  Creates stage stragglers when the bubble budget is exhausted
+  and extends activation lifetimes (OOM risk), per paper Fig. 1.
+* **ElasWavePolicy** — multi-dimensional: dataflow resize (DP domain) +
+  minimax layer re-partition (PP domain) + DVFS top-up.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .cost_model import HardwareSpec, SegmentCosts, mini_step_time
+from .pipeline import StageTiming, simulate_1f1b, simulate_dp_pp
+from .planners.dataflow import plan_dataflow
+from .planners.graph import minimax_layer_partition
+from .planners.dvfs import plan_dvfs, ACHIEVABLE
+
+
+@dataclasses.dataclass
+class ClusterView:
+    """What the Agent reports to the Core."""
+    dp: int                          # replicas
+    pp: int                          # stages
+    global_batch: int
+    num_micro: int
+    seq: int
+    layer_assignment: List[Tuple[int, int]]   # per stage [a, b] inclusive
+    alive: np.ndarray                # [dp, pp] bool
+    freq: np.ndarray                 # [dp, pp] normalized frequency
+    slow: np.ndarray                 # [dp, pp] straggler multiplier (>=1)
+    mem_cap: float                   # bytes per device
+
+
+@dataclasses.dataclass
+class Decision:
+    name: str
+    step_time: float
+    feasible: bool
+    detail: Dict
+
+
+def _stage_times(seg: SegmentCosts, view: ClusterView, assignment,
+                 mbs_by_stage: Sequence[int], freq: np.ndarray,
+                 slow: np.ndarray, d: int) -> List[StageTiming]:
+    stages = []
+    for p, (a, b) in enumerate(assignment):
+        eff = seg.hw.peak_flops * seg.hw.mfu * freq[d, p] / slow[d, p]
+        fl = seg.seg_fwd_flops(a, b, mbs_by_stage[p])
+        stages.append(StageTiming(fl / eff, 2 * fl / eff, view.num_micro))
+    return stages
+
+
+class TorchFTPolicy:
+    name = "torchft"
+
+    def decide(self, seg: SegmentCosts, view: ClusterView) -> Decision:
+        # replicas with any dead rank are dropped entirely
+        alive_reps = [d for d in range(view.dp) if view.alive[d].all()]
+        n = len(alive_reps)
+        if n == 0:
+            return Decision(self.name, float("inf"), False, {"alive_reps": 0})
+        # global batch is re-split over the surviving replicas: same
+        # micro-batch size, proportionally more micro-batches per replica.
+        mbs = max(1, view.global_batch // (view.num_micro * view.dp))
+        num_micro_n = -(-view.global_batch // (mbs * n))
+        times = []
+        for d in alive_reps:
+            st = _stage_times(seg, view, view.layer_assignment,
+                              [mbs] * view.pp, view.freq, view.slow, d)
+            st = [StageTiming(s.fwd, s.bwd, num_micro_n) for s in st]
+            times.append(simulate_1f1b(st).step_time)
+        # replicas synchronized by grad all-reduce
+        return Decision(self.name, max(times), True,
+                        {"alive_reps": n, "mbs": mbs, "num_micro": num_micro_n,
+                         "wasted_ranks": int((view.alive.sum()
+                                              - n * view.pp))})
+
+
+class ReCyclePolicy:
+    name = "recycle"
+
+    def __init__(self, oom_pressure_limit: float = 2.5):
+        # memory-pressure model: rerouting extends activation lifetimes and
+        # defers weight-gradients on every affected stage.  pressure =
+        # sum over affected stages of (extra / num_micro).  Calibrated so the
+        # paper's observation holds: Llama2-34B (DP=3) OOMs at 3-node loss
+        # (6 affected stages x 0.5 = 3.0 > limit) but not at 1-2 nodes.
+        self.oom_pressure_limit = oom_pressure_limit
+
+    def decide(self, seg: SegmentCosts, view: ClusterView) -> Decision:
+        mbs = max(1, view.global_batch // (view.num_micro * view.dp))
+        extra: Dict[Tuple[int, int], int] = {}
+        for p in range(view.pp):
+            dead = [d for d in range(view.dp) if not view.alive[d, p]]
+            live = [d for d in range(view.dp) if view.alive[d, p]]
+            if dead and not live:
+                return Decision(self.name, float("inf"), False, {"stage_lost": p})
+            for i, d in enumerate(dead):
+                # reroute the failed rank's micro-batches round-robin to peers
+                share = view.num_micro // max(len(live), 1)
+                for j, ld in enumerate(live):
+                    add = share + (1 if j < view.num_micro % max(len(live), 1) else 0)
+                    extra[(ld, p)] = extra.get((ld, p), 0) + add
+        # OOM check: deferred weight-grad + extended activation pressure
+        pressure = sum(e / view.num_micro for e in extra.values())
+        oom = pressure > self.oom_pressure_limit
+        fwd = [[0.0] * view.pp for _ in range(view.dp)]
+        bwd = [[0.0] * view.pp for _ in range(view.dp)]
+        for d in range(view.dp):
+            st = _stage_times(seg, view, view.layer_assignment,
+                              [mbs] * view.pp, view.freq, view.slow, d)
+            for p, s in enumerate(st):
+                fwd[d][p], bwd[d][p] = s.fwd, s.bwd
+        # replicas with dead ranks still run (peers cover), but dead rank rows
+        # excluded from timing by copying a live replica's times (uniform
+        # hardware -> any live row; if none is fully live, rows are already
+        # per-stage correct since peers cover the dead cells)
+        live_rows = [d for d in range(view.dp) if view.alive[d].all()]
+        if live_rows:
+            for d in range(view.dp):
+                if not view.alive[d].all():
+                    fwd[d] = list(fwd[live_rows[0]])
+                    bwd[d] = list(bwd[live_rows[0]])
+        step, _ = simulate_dp_pp(fwd, bwd, view.num_micro,
+                                 extra_micro=extra)
+        return Decision(self.name, step, not oom,
+                        {"extra_micro": dict(extra), "oom": oom, "mbs": mbs})
+
+
+class ElasWavePolicy:
+    name = "elaswave"
+
+    def __init__(self, hw: Optional[HardwareSpec] = None, use_dvfs: bool = True,
+                 use_migration: bool = True, pipeline_v: int = 1):
+        self.hw = hw or HardwareSpec()
+        self.use_dvfs = use_dvfs
+        self.use_migration = use_migration
+        self.pipeline_v = pipeline_v     # >1: interleaved-1F1B virtual stages
+
+    def decide(self, seg: SegmentCosts, view: ClusterView) -> Decision:
+        L = seg.cfg.num_layers
+        P = view.pp
+        # per-stage surviving DP width
+        width = [int(view.alive[:, p].sum()) for p in range(P)]
+        if min(width) == 0:
+            return Decision(self.name, float("inf"), False, {"stage_lost": True})
+        # 1) dataflow: per-stage micro-batch sizes (failed rank's share spread)
+        per_micro = view.global_batch // view.num_micro
+        mbs_stage = [int(np.ceil(per_micro / w)) for w in width]
+
+        # 2) graph: minimax layer re-partition under memory caps.
+        # Per-stage straggler factors enter the cost (a slow stage should
+        # receive FEWER layers — fail-slow mitigation via migration).
+        slow_stage = [max((view.slow[d, p] for d in range(view.dp)
+                           if view.alive[d, p]), default=1.0)
+                      for p in range(P)]
+
+        def t(p, a, b):
+            return mini_step_time(seg, a, b, mbs_stage[p], hw=self.hw) \
+                * slow_stage[p]
+
+        def mem(p, a, b):
+            return seg.seg_mem(a, b, mbs_stage[p], inflight=min(P, view.num_micro),
+                               dp_size=width[p])
+
+        if self.use_migration:
+            plan = minimax_layer_partition(L, P, t, mem,
+                                           [view.mem_cap] * P)
+            if not plan.feasible:
+                return Decision(self.name, float("inf"), False, {"mem_infeasible": True})
+            assignment = list(plan.stage_ranges)
+        else:
+            assignment = list(view.layer_assignment)
+
+        # 3) DVFS: up-clock residual stragglers to match the best stage time
+        freq = view.freq.copy()
+        base_times = []
+        for p, (a, b) in enumerate(assignment):
+            worst_slow = max(view.slow[d, p] for d in range(view.dp)
+                             if view.alive[d, p])
+            eff = self.hw.peak_flops * self.hw.mfu / worst_slow
+            fl = seg.seg_fwd_flops(a, b, mbs_stage[p])
+            base_times.append(3 * fl / eff)
+        target = min(base_times)
+        dvfs_detail = []
+        if self.use_dvfs:
+            for p in range(P):
+                if base_times[p] <= target * 1.001:
+                    continue
+
+                def obs(f, p=p):
+                    return base_times[p] / f
+
+                dplan = plan_dvfs(obs, 1.0, self.hw.max_freq, target,
+                                  eps=0.02 * target, df_min=0.01, rank=p)
+                for d in range(view.dp):
+                    freq[d, p] = max(freq[d, p], dplan.freq)
+                base_times[p] = base_times[p] / dplan.freq
+                dvfs_detail.append((p, round(dplan.freq, 3), dplan.status))
+
+        # evaluate: stage p runs with its own width/mbs; replicas sync on DP
+        # all-reduce — simulate one "effective" pipeline with per-stage times
+        stages = []
+        for p, (a, b) in enumerate(assignment):
+            worst_slow = max(view.slow[d, p] for d in range(view.dp)
+                             if view.alive[d, p])
+            f = max(freq[d, p] for d in range(view.dp) if view.alive[d, p])
+            eff = self.hw.peak_flops * self.hw.mfu * f / worst_slow
+            fl = seg.seg_fwd_flops(a, b, mbs_stage[p])
+            stages.append(StageTiming(fl / eff, 2 * fl / eff, view.num_micro))
+        if self.pipeline_v > 1:
+            from .pipeline import simulate_interleaved_1f1b
+            step = simulate_interleaved_1f1b(stages, v=self.pipeline_v).step_time
+        else:
+            step = simulate_1f1b(stages).step_time
+        return Decision(self.name, step, True,
+                        {"assignment": assignment, "mbs_stage": mbs_stage,
+                         "dvfs": dvfs_detail, "width": width})

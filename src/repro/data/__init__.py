@@ -1,0 +1,1 @@
+from .pipeline import GlobalBatchSampler, materialize_samples, make_batch

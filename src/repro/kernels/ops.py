@@ -1,0 +1,57 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+On this CPU container the kernels always run in interpret mode (Pallas TPU
+lowering requires a TPU backend); on a real TPU deployment set
+REPRO_PALLAS_INTERPRET=0.  The wrappers adapt model-layer layouts (GQA head
+broadcast, group broadcast) to the kernels' MHA/per-head forms.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention_kernel
+from .rmsnorm import rmsnorm_kernel
+from .ssd_scan import ssd_scan_kernel
+
+_INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    block_q: int = 128, block_k: int = 128):
+    """q: [B,S,H,hd]; k,v: [B,S,Hkv,hd] (GQA broadcast inside). -> [B,S,H,hd]."""
+    B, S, H, hd = q.shape
+    Hkv = k.shape[2]
+    rep = H // Hkv
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    o = flash_attention_kernel(qf, kf, vf, causal=causal, block_q=block_q,
+                               block_k=block_k, interpret=_INTERPRET)
+    return o.reshape(B, H, S, hd).transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("eps",))
+def rmsnorm(x, scale, *, eps: float = 1e-5):
+    return rmsnorm_kernel(x, scale, eps=eps, interpret=_INTERPRET)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def ssd_scan(x, dt, A, B, C, *, chunk: int = 256, initial_state=None):
+    """Mamba2 SSD, model-layer layout: B, C: [b,s,g,n] (groups).
+    Returns (y, final_state=None) matching mamba.ssd_chunked's signature."""
+    del initial_state   # training path starts from zero state
+    b, s, h, p = x.shape
+    g = B.shape[2]
+    rep = h // g
+    Bh = jnp.repeat(B, rep, axis=2)
+    Ch = jnp.repeat(C, rep, axis=2)
+    y = ssd_scan_kernel(x, dt, A, Bh, Ch, chunk=chunk, interpret=_INTERPRET)
+    return y, None

@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mha_reference(q, k, v, *, causal: bool = True, sm_scale=None):
+    """q,k,v: [BH, S, d] -> [BH, S, d]; fp32 softmax like the kernel."""
+    BH, S, d = q.shape
+    sm_scale = sm_scale if sm_scale is not None else d ** -0.5
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * sm_scale
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), dtype=bool))
+        s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def rmsnorm_reference(x, scale, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale).astype(x.dtype)
+
+
+def ssd_reference(x, dt, A, Bh, Ch, initial_state=None):
+    """Sequential (recurrent) SSD oracle — O(S) scan, exact.
+
+    x: [b,s,h,p]; dt: [b,s,h]; A: [h]; Bh, Ch: [b,s,h,n] (groups pre-broadcast).
+    Returns y: [b,s,h,p], final_state: [b,h,p,n].
+    """
+    b, s, h, p = x.shape
+    n = Bh.shape[-1]
+    state0 = initial_state if initial_state is not None else \
+        jnp.zeros((b, h, p, n), jnp.float32)
+
+    def step(state, inp):
+        xt, dtt, Bt, Ct = inp          # [b,h,p], [b,h], [b,h,n], [b,h,n]
+        dA = jnp.exp(dtt * A[None, :])                       # [b,h]
+        upd = jnp.einsum("bh,bhp,bhn->bhpn", dtt, xt.astype(jnp.float32),
+                         Bt.astype(jnp.float32))
+        state = dA[:, :, None, None] * state + upd
+        y = jnp.einsum("bhpn,bhn->bhp", state, Ct.astype(jnp.float32))
+        return state, y
+
+    xs = (jnp.moveaxis(x, 1, 0), jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(Bh, 1, 0), jnp.moveaxis(Ch, 1, 0))
+    final, ys = jax.lax.scan(step, state0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), final

@@ -1,0 +1,108 @@
+"""Mamba2 SSD chunk scan — Pallas TPU kernel.
+
+The SSD recurrence is computed chunk-by-chunk: within a chunk the quadratic
+(matmul-rich, MXU-friendly) form produces the intra-chunk output; the carried
+state [p, n] lives in VMEM scratch and is advanced across the sequential
+chunk grid dimension.  Tiling:
+
+  grid = (batch, heads, num_chunks)   # chunks sequential (carry in scratch)
+  VMEM blocks: x[c, p], dt[c], B[c, n], C[c, n], out y[c, p], state[p, n]
+
+For mamba2-2.7b (p=64, n=128, c=256) the working set is
+  256*64 + 2*256*128 + 64*128 floats ≈ 0.4 MiB — VMEM-friendly; matmul dims
+(c=256, n=128, p=64) are MXU-aligned on two of three axes.
+
+Groups are pre-broadcast to heads by the ops.py wrapper.  Validated in
+interpret mode against ref.ssd_reference (exact sequential recurrence).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, A_ref, B_ref, C_ref, y_ref, state_ref,
+                *, chunk: int):
+    ci = pl.program_id(2)
+    hi = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[...].astype(jnp.float32)        # [c, p]
+    dt = dt_ref[...].astype(jnp.float32)      # [c]
+    A = A_ref[hi]                             # scalar decay for this head
+    B = B_ref[...].astype(jnp.float32)        # [c, n]
+    C = C_ref[...].astype(jnp.float32)        # [c, n]
+
+    dA = dt * A                               # [c]  (<= 0)
+    cum = jnp.cumsum(dA)                      # within-chunk cumulative decay
+    seg_total = cum[-1]
+
+    # ---- intra-chunk quadratic form ----
+    # L[i,j] = exp(cum[i] - cum[j]) for i >= j else 0.  Mask before exp:
+    # upper-triangle diffs are positive (overflow -> inf -> NaN grads).
+    diff = cum[:, None] - cum[None, :]
+    li = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    lj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    Lm = jnp.exp(jnp.where(li >= lj, diff, -1e30))        # [c, c]
+    CB = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # [c, c]
+    xdt = x * dt[:, None]                                  # [c, p]
+    y_intra = jax.lax.dot_general(CB * Lm, xdt, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+
+    # ---- contribution of the entering state ----
+    state = state_ref[...]                                 # [p, n]
+    state_decay = jnp.exp(cum)                             # [c]
+    y_inter = jax.lax.dot_general(C, state, (((1,), (1,)), ((), ())),
+                                  preferred_element_type=jnp.float32) \
+        * state_decay[:, None]                             # [c, p]
+
+    y_ref[...] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    # ---- advance the carried state ----
+    decay_to_end = jnp.exp(seg_total - cum)                # [c]
+    # state' = exp(seg_total) * state + sum_i B_i dt_i decay_i x_i^T
+    upd = jax.lax.dot_general(xdt * decay_to_end[:, None], B,
+                              (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)  # [p, n]
+    state_ref[...] = jnp.exp(seg_total) * state + upd
+
+
+def ssd_scan_kernel(x, dt, A, Bh, Ch, *, chunk: int = 256,
+                    interpret: bool = True):
+    """x: [b,s,h,p]; dt: [b,s,h]; A: [h]; Bh, Ch: [b,s,h,n] (pre-broadcast).
+    Returns y: [b,s,h,p] (final state not returned — training path)."""
+    b, s, h, p = x.shape
+    n = Bh.shape[-1]
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    # layout: [b, h, s, ...] so the chunk axis is blockable per (b, h)
+    xt = jnp.moveaxis(x, 1, 2)                 # [b,h,s,p]
+    dtt = jnp.moveaxis(dt, 1, 2)               # [b,h,s]
+    Bt = jnp.moveaxis(Bh, 1, 2)                # [b,h,s,n]
+    Ct = jnp.moveaxis(Ch, 1, 2)
+    grid = (b, h, nc)
+    y = pl.pallas_call(
+        functools.partial(_ssd_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, None, chunk, p), lambda bi, hi, ci: (bi, hi, ci, 0)),
+            pl.BlockSpec((None, None, chunk), lambda bi, hi, ci: (bi, hi, ci)),
+            pl.BlockSpec((h,), lambda bi, hi, ci: (0,)),     # full A in VMEM
+            pl.BlockSpec((None, None, chunk, n), lambda bi, hi, ci: (bi, hi, ci, 0)),
+            pl.BlockSpec((None, None, chunk, n), lambda bi, hi, ci: (bi, hi, ci, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, None, chunk, p), lambda bi, hi, ci: (bi, hi, ci, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, s, p), x.dtype),
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(xt, dtt, A.astype(jnp.float32), Bt, Ct)
+    return jnp.moveaxis(y, 2, 1)               # [b,s,h,p]

@@ -1,0 +1,109 @@
+"""Roofline-term extraction from a lowered/compiled cell.
+
+compute term    = HLO_FLOPs / (chips * peak)
+memory term     = HLO_bytes / (chips * hbm_bw)
+collective term = collective_bytes / (chips * link_bw)
+
+HLO_FLOPs / bytes come from compiled.cost_analysis().  Collective bytes are
+NOT in cost_analysis: we parse the compiled HLO text and sum *operand* sizes
+of all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute,
+deriving operand size from the printed result shape and replica-group size
+(all-gather result = operand x G; reduce-scatter result = operand / G).
+"""
+from __future__ import annotations
+
+import math
+import re
+from typing import Dict, Optional
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_INSTR = re.compile(
+    r"=\s+(?:\()?([a-z0-9]+)\[([\d,]*)\][^\s]*\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(",
+)
+_TUPLE_INSTR = re.compile(
+    r"=\s+\(((?:[a-z0-9]+\[[\d,]*\][^,)]*(?:,\s*)?)+)\)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(",
+)
+_GROUPS_LIST = re.compile(r"replica_groups=\{(.*?)\}\}?", re.S)
+_GROUPS_IOTA = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_SHAPE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * DTYPE_BYTES.get(dtype, 4)
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST.search(line)
+    if m:
+        first = m.group(1).split("}")[0].strip("{} ")
+        if first:
+            return len([x for x in first.split(",") if x.strip() != ""])
+    return 1
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum operand bytes per collective kind over the whole module."""
+    out: Dict[str, float] = {k: 0.0 for k in COLLECTIVES}
+    seen_done = set()
+    for line in hlo_text.splitlines():
+        if "-done(" in line:
+            continue    # async pair: count only the -start
+        m = _INSTR.search(line)
+        shapes = []
+        kind = None
+        if m:
+            shapes = [(m.group(1), m.group(2))]
+            kind = m.group(3)
+        else:
+            mt = _TUPLE_INSTR.search(line)
+            if mt:
+                kind = mt.group(2)
+                shapes = _SHAPE.findall(mt.group(1))
+        if not kind:
+            continue
+        g = _group_size(line)
+        result = sum(_shape_bytes(dt, dims) for dt, dims in shapes)
+        if kind == "all-gather":
+            operand = result / max(g, 1)
+        elif kind == "reduce-scatter":
+            operand = result * max(g, 1)
+        else:
+            operand = result
+        out[kind] += operand
+    out["total"] = sum(out[k] for k in COLLECTIVES)
+    return out
+
+
+def roofline_terms(flops: float, bytes_accessed: float, coll_bytes: float,
+                   chips: int, peak_flops: float = 197e12,
+                   hbm_bw: float = 819e9, link_bw: float = 50e9,
+                   ) -> Dict[str, float]:
+    compute = flops / (chips * peak_flops)
+    memory = bytes_accessed / (chips * hbm_bw)
+    collective = coll_bytes / (chips * link_bw)
+    dom = max(("compute", compute), ("memory", memory),
+              ("collective", collective), key=lambda kv: kv[1])
+    return {
+        "compute_s": compute, "memory_s": memory, "collective_s": collective,
+        "bottleneck": dom[0],
+        "roofline_s": max(compute, memory, collective),
+    }

@@ -1,0 +1,2 @@
+from .config import ModelConfig
+from . import layers, mamba, moe, transformer, encdec, registry

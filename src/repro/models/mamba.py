@@ -1,0 +1,219 @@
+"""Mamba2 (SSD — state-space duality) block, arXiv:2405.21060.
+
+Training path uses the chunked SSD algorithm (matmul-rich, MXU friendly);
+decode path uses the O(1) recurrent state update.  The chunk scan's inner
+computation is also available as a Pallas kernel (kernels/ssd_scan.py); the
+pure-jnp path here doubles as its oracle.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import _dense, init_rmsnorm, rmsnorm
+
+
+def init_mamba(key, cfg: ModelConfig) -> Dict[str, Any]:
+    d, di = cfg.d_model, cfg.d_inner
+    ds, ng, H = cfg.ssm_state, cfg.ssm_ngroups, cfg.ssm_heads
+    dt = cfg.jnp_dtype
+    ks = jax.random.split(key, 4)
+    d_in_proj = 2 * di + 2 * ng * ds + H      # z, x, B, C, dt
+    conv_dim = di + 2 * ng * ds
+    return {
+        "in_proj": _dense(ks[0], (d, d_in_proj), dt),
+        "conv_w": _dense(ks[1], (cfg.conv_kernel, conv_dim), dt, scale=cfg.conv_kernel ** -0.5),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H, dtype=jnp.float32)),
+        "D": jnp.ones((H,), dtype=jnp.float32),
+        "dt_bias": jnp.zeros((H,), dtype=jnp.float32),
+        "out_norm": init_rmsnorm(di, dt),
+        "out_proj": _dense(ks[2], (di, d), dt),
+    }
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt):
+    di, ds, ng, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_ngroups, cfg.ssm_heads
+    z = zxbcdt[..., :di]
+    x = zxbcdt[..., di:2 * di]
+    B = zxbcdt[..., 2 * di:2 * di + ng * ds]
+    C = zxbcdt[..., 2 * di + ng * ds:2 * di + 2 * ng * ds]
+    dt = zxbcdt[..., 2 * di + 2 * ng * ds:]
+    return z, x, B, C, dt
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int, initial_state=None,
+                use_pallas: bool = False):
+    """Chunked SSD scan (Mamba2 alg. 3).
+
+    x: [b, s, h, p]   (p = headdim)
+    dt: [b, s, h]     (softplus-activated step sizes, >= 0)
+    A: [h]            (negative decay rates)
+    B, C: [b, s, g, n] (g groups broadcast over heads; n = d_state)
+    Returns y: [b, s, h, p], final_state: [b, h, p, n]
+    """
+    if use_pallas:
+        from repro.kernels import ops as kops
+        return kops.ssd_scan(x, dt, A, B, C, chunk=chunk, initial_state=initial_state)
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    pad = (-s) % chunk
+    if pad:
+        # zero-pad the tail: dt=0 -> no state update, padded y discarded
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        s_orig, s = s, s + pad
+    nc = s // chunk
+    rep = h // g
+    xc = x.reshape(b, nc, chunk, h, p)
+    dtc = dt.reshape(b, nc, chunk, h)
+    Bc = B.reshape(b, nc, chunk, g, n)
+    Cc = C.reshape(b, nc, chunk, g, n)
+    # broadcast groups -> heads
+    Bh = jnp.repeat(Bc, rep, axis=3)                    # [b,nc,c,h,n]
+    Ch = jnp.repeat(Cc, rep, axis=3)
+
+    dA = dtc * A[None, None, None, :]                   # [b,nc,c,h]  (<=0)
+    cum = jnp.cumsum(dA, axis=2)                        # within-chunk cumsum
+    seg_total = cum[:, :, -1, :]                        # [b,nc,h]
+
+    # ---- intra-chunk (quadratic within chunk, matmul form) ----
+    # L[i,j] = exp(cum[i]-cum[j]) for i>=j.  Mask BEFORE exp: upper-triangle
+    # diffs are positive and overflow, and grad-of-where(inf) is NaN.
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]    # [b,nc,c,c,h]
+    mask = jnp.tril(jnp.ones((chunk, chunk), dtype=bool))
+    diff = jnp.where(mask[None, None, :, :, None], diff, -1e30)
+    L = jnp.exp(diff)
+    CB = jnp.einsum("bzchn,bzkhn->bzckh", Ch, Bh)           # [b,nc,c,c,h]
+    xdt = xc * dtc[..., None]                               # [b,nc,c,h,p]
+    y_intra = jnp.einsum("bzckh,bzckh,bzkhp->bzchp", CB, L.astype(CB.dtype),
+                         xdt.astype(CB.dtype))
+
+    # ---- chunk states (fp32 for the carried recurrence) ----
+    decay_to_end = jnp.exp(seg_total[:, :, None, :] - cum)   # [b,nc,c,h]
+    states = jnp.einsum("bzchn,bzch,bzchp->bzhpn",
+                        Bh.astype(jnp.float32),
+                        (dtc * decay_to_end).astype(jnp.float32),
+                        xc.astype(jnp.float32))              # [b,nc,h,p,n]
+
+    # ---- inter-chunk recurrence over chunk states ----
+    seg_decay = jnp.exp(seg_total)                           # [b,nc,h]
+    if initial_state is None:
+        initial_state = jnp.zeros((b, h, p, n), dtype=jnp.float32)
+    else:
+        initial_state = initial_state.astype(jnp.float32)
+
+    def scan_fn(carry, inp):
+        st, dec = inp                                        # [b,h,p,n], [b,h]
+        new = st + dec[:, :, None, None] * carry
+        return new, carry                                    # emit state *entering* chunk
+
+    states_t = jnp.moveaxis(states, 1, 0)                    # [nc,b,h,p,n]
+    decay_t = jnp.moveaxis(seg_decay, 1, 0)                  # [nc,b,h]
+    final_state, entry_states = jax.lax.scan(
+        scan_fn, initial_state, (states_t, decay_t))
+    entry_states = jnp.moveaxis(entry_states, 0, 1)          # [b,nc,h,p,n]
+
+    # ---- contribution of entering state to outputs ----
+    state_decay = jnp.exp(cum)                               # [b,nc,c,h]
+    y_inter = jnp.einsum("bzchn,bzhpn,bzch->bzchp", Ch, entry_states.astype(Ch.dtype),
+                         state_decay.astype(Ch.dtype))
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    if pad:
+        y = y[:, :s_orig]
+    return y, final_state
+
+
+def ssd_decode_step(x, dt, A, B, C, state):
+    """Single-token recurrent update.
+    x: [b,1,h,p]; dt: [b,1,h]; B,C: [b,1,g,n]; state: [b,h,p,n]."""
+    b, _, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    rep = h // g
+    Bh = jnp.repeat(B[:, 0], rep, axis=1)        # [b,h,n]
+    Ch = jnp.repeat(C[:, 0], rep, axis=1)
+    dA = jnp.exp(dt[:, 0] * A[None, :])          # [b,h]
+    upd = jnp.einsum("bh,bhp,bhn->bhpn", dt[:, 0], x[:, 0].astype(jnp.float32),
+                     Bh.astype(jnp.float32))
+    new_state = dA[:, :, None, None] * state + upd
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, Ch.astype(jnp.float32))
+    return y[:, None].astype(x.dtype), new_state
+
+
+def _causal_conv(x, w, conv_state=None):
+    """Depthwise causal conv. x: [b,s,c]; w: [k,c]; conv_state: [b,k-1,c]."""
+    k = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), dtype=x.dtype)
+    else:
+        pad = conv_state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)           # [b, s+k-1, c]
+    new_state = xp[:, -(k - 1):, :]
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :] for i in range(k))
+    return out, new_state
+
+
+def apply_mamba(params, cfg: ModelConfig, x,
+                state: Optional[Dict] = None, use_pallas: bool = False,
+                ) -> Tuple[jax.Array, Optional[Dict]]:
+    """Mamba2 block.  state = {"ssm": [b,h,p,n], "conv": [b,k-1,conv_dim]}
+    enables single-token decode; None = full-sequence training."""
+    B_, S, _ = x.shape
+    H, p_ = cfg.ssm_heads, cfg.ssm_headdim
+    if cfg.mamba_split_proj:
+        # slice the WEIGHT per component (weight reshard is per-layer-constant
+        # bytes; activation reshard of the packed output would be per-token)
+        w = params["in_proj"]
+        di, ds, ng = cfg.d_inner, cfg.ssm_state, cfg.ssm_ngroups
+        o1, o2, o3, o4 = di, 2 * di, 2 * di + ng * ds, 2 * di + 2 * ng * ds
+        z = x @ w[:, :o1]
+        xs = x @ w[:, o1:o2]
+        Bv = x @ w[:, o2:o3]
+        Cv = x @ w[:, o3:o4]
+        dt = x @ w[:, o4:]
+    else:
+        zxbcdt = x @ params["in_proj"]
+        z, xs, Bv, Cv, dt = _split_proj(cfg, zxbcdt)
+    xBC = jnp.concatenate([xs, Bv, Cv], axis=-1)
+    new_state = None
+    if state is not None:
+        xBC, conv_state = _causal_conv(xBC, params["conv_w"], state["conv"])
+    else:
+        xBC, conv_state = _causal_conv(xBC, params["conv_w"])
+    xBC = jax.nn.silu(xBC)
+    di, ds, ng = cfg.d_inner, cfg.ssm_state, cfg.ssm_ngroups
+    xs = xBC[..., :di].reshape(B_, S, H, p_)
+    Bv = xBC[..., di:di + ng * ds].reshape(B_, S, ng, ds)
+    Cv = xBC[..., di + ng * ds:].reshape(B_, S, ng, ds)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    if state is not None and S == 1:
+        # single-token decode: O(1) recurrent update
+        y, ssm_state = ssd_decode_step(xs, dt, A, Bv, Cv, state["ssm"])
+        new_state = {"ssm": ssm_state, "conv": conv_state}
+    elif state is not None:
+        # prefill-with-state: chunked scan carrying the state forward
+        y, ssm_state = ssd_chunked(xs, dt, A, Bv, Cv,
+                                   chunk=min(cfg.ssm_chunk, S),
+                                   initial_state=state["ssm"])
+        new_state = {"ssm": ssm_state, "conv": conv_state}
+    else:
+        y, _ = ssd_chunked(xs, dt, A, Bv, Cv, chunk=min(cfg.ssm_chunk, S),
+                           use_pallas=use_pallas)
+    y = y + xs * params["D"][None, None, :, None]
+    y = y.reshape(B_, S, di).astype(x.dtype)
+    y = rmsnorm(params["out_norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    return y @ params["out_proj"], new_state
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int):
+    H, p_, n = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state
+    return {
+        "ssm": jnp.zeros((batch, H, p_, n), dtype=jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_kernel - 1, conv_dim), dtype=cfg.jnp_dtype),
+    }

@@ -1,0 +1,173 @@
+"""Mixture-of-Experts MLP with fixed-capacity token dispatch.
+
+Expert-parallel friendly: the expert dimension is a leading axis of every
+expert weight, so it shards cleanly over the `model` mesh axis (EP).  Dispatch
+uses capacity buckets built with one-hot position ranking (dense, SPMD-safe —
+no ragged ops), the standard TPU formulation (GShard/Switch-style).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import _dense
+
+
+def init_moe(key, cfg: ModelConfig) -> Dict[str, Any]:
+    d, ff, E = cfg.d_model, cfg.moe_d_ff, cfg.num_experts
+    dt = cfg.jnp_dtype
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": _dense(ks[0], (d, E), jnp.dtype("float32")),
+        "wg": _dense(ks[1], (E, d, ff), dt),
+        "wu": _dense(ks[2], (E, d, ff), dt),
+        "wo": _dense(ks[3], (E, ff, d), dt),
+    }
+    if cfg.num_shared_experts:
+        sff = ff * cfg.num_shared_experts
+        kk = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "wg": _dense(kk[0], (d, sff), dt),
+            "wu": _dense(kk[1], (d, sff), dt),
+            "wo": _dense(kk[2], (sff, d), dt),
+        }
+    return p
+
+
+def apply_moe(params, cfg: ModelConfig, x) -> Tuple[jax.Array, jax.Array]:
+    """x: [B,S,d] -> (out [B,S,d], aux_loss scalar).
+
+    Fixed capacity C = ceil(T/E * top_k * capacity_factor) per expert.
+    Overflow tokens are dropped (standard capacity semantics).
+
+    Two dispatch modes:
+      * global (default): one token ranking over the whole local batch —
+        faithful single-queue capacity semantics.
+      * row (cfg.moe_row_dispatch, §Perf): capacity per sample row; the
+        rank-in-queue cumsum and the dispatch scatter stay local to the
+        batch shard, so SPMD partitioning introduces no cross-device
+        ranking collective.
+    """
+    if cfg.moe_row_dispatch:
+        return _apply_moe_rowwise(params, cfg, x)
+    B, S, d = x.shape
+    E, K = cfg.num_experts, cfg.top_k
+    T = B * S
+    xt = x.reshape(T, d)
+    logits = (xt.astype(jnp.float32) @ params["router"])       # [T,E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)              # [T,K]
+    # normalize top-k gates (deepseek-style)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # aux load-balancing loss (Switch-style)
+    me = jnp.mean(probs, axis=0)                               # [E]
+    ce = jnp.mean(jax.nn.one_hot(gate_idx[:, 0], E, dtype=jnp.float32), axis=0)
+    aux = jnp.sum(me * ce) * E * cfg.router_aux_loss
+
+    cap = int(max(1, round(T * K / E * cfg.capacity_factor)))
+    # position of each (token, k) within its expert's queue
+    onehot = jax.nn.one_hot(gate_idx, E, dtype=jnp.int32)      # [T,K,E]
+    flat = onehot.reshape(T * K, E)
+    pos = jnp.cumsum(flat, axis=0) - flat                      # rank in queue
+    pos = jnp.sum(pos * flat, axis=-1).reshape(T, K)           # [T,K]
+    keep = pos < cap
+    gate_vals = gate_vals * keep.astype(gate_vals.dtype)
+
+    # dispatch: build [E, cap, d] buckets via scatter
+    eidx = gate_idx.reshape(-1)                                # [T*K]
+    pidx = pos.reshape(-1)
+    kmask = keep.reshape(-1)
+    src = jnp.repeat(jnp.arange(T), K)
+    safe_p = jnp.where(kmask, pidx, cap - 1)
+    buckets = jnp.zeros((E, cap, d), dtype=x.dtype)
+    buckets = buckets.at[eidx, safe_p].add(
+        jnp.where(kmask[:, None], xt[src], 0).astype(x.dtype))
+
+    # expert compute: [E, cap, d] einsum with [E, d, ff]
+    if cfg.activation == "relu2":
+        h = jax.nn.relu(jnp.einsum("ecd,edf->ecf", buckets, params["wg"]))
+        out_b = jnp.einsum("ecf,efd->ecd", h * h, params["wo"])
+    else:
+        g = jnp.einsum("ecd,edf->ecf", buckets, params["wg"])
+        u = jnp.einsum("ecd,edf->ecf", buckets, params["wu"])
+        out_b = jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u, params["wo"])
+
+    # combine: gather back and weight by gates
+    gathered = out_b[eidx, safe_p]                             # [T*K, d]
+    w = (gate_vals.reshape(-1) * kmask).astype(x.dtype)
+    out = jnp.zeros((T, d), dtype=x.dtype).at[src].add(gathered * w[:, None])
+
+    if cfg.num_shared_experts:
+        sp = params["shared"]
+        if cfg.activation == "relu2":
+            h = jax.nn.relu(xt @ sp["wg"])
+            out = out + (h * h) @ sp["wo"]
+        else:
+            out = out + (jax.nn.silu(xt @ sp["wg"]) * (xt @ sp["wu"])) @ sp["wo"]
+    return out.reshape(B, S, d), aux
+
+
+def _apply_moe_rowwise(params, cfg: ModelConfig, x) -> Tuple[jax.Array, jax.Array]:
+    """Row-local dispatch (§Perf): capacity per sample row, rank-in-queue
+    cumsum over [S*K] per row, dispatch scatter vmapped over the batch dim —
+    everything partitions cleanly along the batch shard."""
+    B, S, d = x.shape
+    E, K = cfg.num_experts, cfg.top_k
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)            # [B,S,K]
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    me = jnp.mean(probs.reshape(-1, E), axis=0)
+    ce = jnp.mean(jax.nn.one_hot(gate_idx[..., 0].reshape(-1), E,
+                                 dtype=jnp.float32), axis=0)
+    aux = jnp.sum(me * ce) * E * cfg.router_aux_loss
+
+    cap = int(max(1, round(S * K / E * cfg.capacity_factor)))
+    onehot = jax.nn.one_hot(gate_idx, E, dtype=jnp.int32)    # [B,S,K,E]
+    flat = onehot.reshape(B, S * K, E)
+    pos = jnp.cumsum(flat, axis=1) - flat                    # row-local rank
+    pos = jnp.sum(pos.reshape(B, S, K, E) * onehot, axis=-1)  # [B,S,K]
+    keep = pos < cap
+    gate_vals = gate_vals * keep.astype(gate_vals.dtype)
+
+    eidx = gate_idx.reshape(B, S * K)
+    safe_p = jnp.where(keep.reshape(B, S * K), pos.reshape(B, S * K), cap - 1)
+    kmask = keep.reshape(B, S * K)
+    src = jnp.broadcast_to(jnp.arange(S).repeat(K)[None], (B, S * K))
+
+    def scatter_row(xr, er, pr, mr, sr):
+        vals = jnp.where(mr[:, None], xr[sr], 0).astype(x.dtype)
+        return jnp.zeros((E, cap, d), x.dtype).at[er, pr].add(vals)
+
+    buckets = jax.vmap(scatter_row)(x, eidx, safe_p, kmask, src)  # [B,E,cap,d]
+
+    if cfg.activation == "relu2":
+        h = jax.nn.relu(jnp.einsum("becd,edf->becf", buckets, params["wg"]))
+        out_b = jnp.einsum("becf,efd->becd", h * h, params["wo"])
+    else:
+        g = jnp.einsum("becd,edf->becf", buckets, params["wg"])
+        u = jnp.einsum("becd,edf->becf", buckets, params["wu"])
+        out_b = jnp.einsum("becf,efd->becd", jax.nn.silu(g) * u, params["wo"])
+
+    def gather_row(ob, er, pr, wr, sr):
+        vals = ob[er, pr] * wr[:, None]                      # [S*K, d]
+        return jnp.zeros((S, d), ob.dtype).at[sr].add(vals)
+
+    w = (gate_vals.reshape(B, S * K) * kmask).astype(out_b.dtype)
+    out = jax.vmap(gather_row)(out_b, eidx, safe_p, w, src)  # [B,S,d]
+
+    if cfg.num_shared_experts:
+        sp = params["shared"]
+        if cfg.activation == "relu2":
+            h = jax.nn.relu(jnp.einsum("bsd,df->bsf", x, sp["wg"]))
+            out = out + jnp.einsum("bsf,fd->bsd", h * h, sp["wo"])
+        else:
+            g = jnp.einsum("bsd,df->bsf", x, sp["wg"])
+            u = jnp.einsum("bsd,df->bsf", x, sp["wu"])
+            out = out + jnp.einsum("bsf,fd->bsd", jax.nn.silu(g) * u, sp["wo"])
+    return out.astype(x.dtype), aux

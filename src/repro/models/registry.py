@@ -1,0 +1,105 @@
+"""Model registry: uniform entry points over all families.
+
+Also exposes the *per-layer* API used by the ElasWave VirtualCluster, where
+each physical layer is an independently-owned pytree that can migrate between
+pipeline stages.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from . import layers as L
+from . import transformer as T
+from . import encdec as E
+
+
+def flat_layer_types(cfg: ModelConfig) -> List[str]:
+    """Block type of each physical layer, in order."""
+    out: List[str] = []
+    for pat, rep in cfg.block_pattern():
+        out.extend(list(pat) * rep)
+    return out
+
+
+# ---- per-layer (ElasWave cluster) API -------------------------------------
+def init_layer(key, cfg: ModelConfig, layer_idx: int) -> Dict[str, Any]:
+    blk = flat_layer_types(cfg)[layer_idx]
+    return T.init_block(key, cfg, blk)
+
+
+def apply_layer(params, cfg: ModelConfig, layer_idx: int, x, positions,
+                rng_ctx: L.RngCtx):
+    blk = flat_layer_types(cfg)[layer_idx]
+    x, _, aux = T.apply_block(params, cfg, blk, x, positions, rng_ctx, layer_idx)
+    return x, aux
+
+
+def init_stem(key, cfg: ModelConfig):
+    """Embedding (stage-0-owned) params."""
+    return {"embed": L.init_embedding(key, cfg)}
+
+
+def init_head(key, cfg: ModelConfig):
+    """Final norm + lm head (last-stage-owned) params."""
+    k1, k2 = jax.random.split(key)
+    return {"final_norm": L.init_rmsnorm(cfg.d_model, cfg.jnp_dtype),
+            "head": L.init_lm_head(k1, cfg)}
+
+
+def apply_stem(params, cfg: ModelConfig, tokens):
+    return L.embed(params["embed"], tokens)
+
+
+def apply_head(params, cfg: ModelConfig, x):
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return L.lm_logits(params["head"], x)
+
+
+# ---- whole-model API (pjit / dry-run path) ---------------------------------
+def init_model(key, cfg: ModelConfig):
+    if cfg.is_encdec:
+        return E.init_encdec_params(key, cfg)
+    return T.init_params(key, cfg)
+
+
+def model_param_shapes(cfg: ModelConfig):
+    return jax.eval_shape(lambda k: init_model(k, cfg), jax.random.key(0))
+
+
+def make_train_loss(cfg: ModelConfig, use_pallas: bool = False, remat: bool = False):
+    if cfg.is_encdec:
+        def loss_fn(params, batch, rng_ctx=None):
+            return E.encdec_train_loss(params, cfg, batch, rng_ctx)
+    else:
+        def loss_fn(params, batch, rng_ctx=None):
+            return T.train_loss(params, cfg, batch, rng_ctx,
+                                use_pallas=use_pallas, remat=remat)
+    return loss_fn
+
+
+def tiny_config(family: str = "dense", **kw) -> ModelConfig:
+    """Reduced config of a family for CPU tests."""
+    base = dict(name=f"tiny-{family}", family=family, num_layers=4, d_model=64,
+                num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=256,
+                rope_theta=10000.0, dtype="float32")
+    if family == "moe":
+        base.update(num_experts=4, top_k=2, moe_d_ff=64, first_k_dense=1)
+    if family == "ssm":
+        base.update(num_heads=0, num_kv_heads=0, d_ff=0, ssm_state=16,
+                    ssm_headdim=16, ssm_chunk=8)
+        base["num_heads"] = 0
+    if family == "hybrid":
+        base.update(num_layers=4, attn_period=4, attn_layer_offset=0,
+                    ssm_state=16, ssm_headdim=16, ssm_chunk=8,
+                    num_experts=4, top_k=2, moe_d_ff=64, moe_layer_period=2)
+    if family == "audio":
+        base.update(is_encdec=True, encoder_layers=2, decoder_layers=2,
+                    num_layers=2, max_source_positions=32)
+    if family == "vlm":
+        base.update(frontend_embeds=8)
+    base.update(kw)
+    return ModelConfig(**base)

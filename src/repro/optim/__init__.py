@@ -1,0 +1,1 @@
+from .adam import AdamConfig, init_opt_state, adam_update, opt_state_shapes

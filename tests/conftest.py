@@ -1,0 +1,5 @@
+import os
+
+# Tests run on the single real CPU device (the dry-run alone forces 512
+# placeholder devices, inside its own subprocess).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")

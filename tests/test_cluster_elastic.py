@@ -1,0 +1,180 @@
+"""Integration tests: the VirtualCluster elastic runtime end-to-end.
+
+These are the paper's headline guarantees, verified numerically:
+  * computation consistency (§7.5): elastic loss trajectory == fault-free
+  * parameter consistency (§5): live remap preserves optimizer state exactly
+  * migration completeness (§6.2): layer moves don't change the math
+  * dataflow invariant (§4.1): global batch and gradient scale preserved
+"""
+import numpy as np
+import pytest
+
+from repro.core.cluster import VirtualCluster
+from repro.models import registry as R
+
+CFG = R.tiny_config("dense", num_layers=8, dropout_rate=0.1)
+
+
+def mk(dp=4, pp=2, **kw):
+    return VirtualCluster(CFG, dp=dp, pp=pp, global_batch=16, num_micro=2,
+                          seq_len=16, seed=0, **kw)
+
+
+@pytest.fixture(scope="module")
+def baseline_losses():
+    return mk().run(6)
+
+
+class TestComputationConsistency:
+    def test_failfree_deterministic(self, baseline_losses):
+        again = mk().run(6)
+        np.testing.assert_allclose(baseline_losses, again, rtol=0, atol=0)
+
+    def test_elastic_matches_failfree(self, baseline_losses):
+        """Fail (d=1,p=1) after step 3 — trajectory must match the fault-free
+        run to fp-reordering tolerance (paper: RNG resharding + exact grad
+        weighting)."""
+        el = mk()
+        losses = el.run(3)
+        el.recover_fail_stop(1, 1)
+        losses += el.run(3)
+        dev = np.abs(np.array(baseline_losses) - np.array(losses))
+        assert dev.max() < 5e-5, dev
+
+    def test_naive_rng_diverges(self):
+        """Paper §7.5 ablation: without RNG resharding the trajectory drifts
+        by orders of magnitude more."""
+        base = mk(rng_mode="naive").run(6)
+        el = mk(rng_mode="naive")
+        losses = el.run(3)
+        el.recover_fail_stop(1, 1)
+        losses += el.run(3)
+        dev_naive = np.abs(np.array(base) - np.array(losses))[3:].max()
+
+        base_r = mk().run(6)
+        el2 = mk()
+        l2 = el2.run(3)
+        el2.recover_fail_stop(1, 1)
+        l2 += el2.run(3)
+        dev_reshard = np.abs(np.array(base_r) - np.array(l2))[3:].max()
+        assert dev_naive > 50 * max(dev_reshard, 1e-9)
+
+    def test_two_failures(self, baseline_losses):
+        el = mk()
+        losses = el.run(2)
+        el.recover_fail_stop(3, 0)
+        losses += el.run(2)
+        el.recover_fail_stop(0, 1)
+        losses += el.run(2)
+        dev = np.abs(np.array(baseline_losses) - np.array(losses))
+        assert dev.max() < 1e-4, dev
+
+
+class TestParameterConsistency:
+    @pytest.mark.parametrize("layout", ["interleaved", "contiguous"])
+    def test_remap_verified(self, layout):
+        """_live_remap_stage asserts bit-exact reconstruction internally."""
+        el = mk(zero_layout=layout)
+        el.run(2)
+        rec = el.recover_fail_stop(2, 0)
+        assert rec["total"] > 0
+        el.run(1)   # training proceeds
+
+    def test_remap_uses_snapshot_for_failed_shard(self):
+        el = mk()
+        el.run(2)
+        el.recover_fail_stop(1, 1)
+        # the failed dp rank is out of the stage's DP group; survivors'
+        # reassembled state covers the (possibly migrated) stage exactly.
+        # (bit-exactness vs pre-failure truth is asserted inside
+        # _live_remap_stage before migration reshuffles the stage spaces.)
+        st_new = el.stages[1]
+        assert 1 not in st_new.dp_ranks
+        full = el._stage_full_vec(st_new)
+        assert full.size == st_new.total
+
+
+class TestMigration:
+    def test_migration_preserves_params(self):
+        el = mk()
+        el.run(2)
+        from jax.flatten_util import ravel_pytree
+        before = [np.asarray(ravel_pytree(p)[0]) for p in el.layer_params]
+        moves = [(3, 0, 1)]   # move layer 3 stage0 -> stage1
+        new_ranges = [(0, 2), (3, 7)]
+        el._apply_migrations(moves, new_ranges)
+        after_masters = el._entry_from_stage(3)["master"]
+        np.testing.assert_array_equal(after_masters.astype(np.float32),
+                                      before[3].astype(np.float32))
+        assert el.layer_assignment == [(0, 2), (3, 7)]
+        el.run(1)
+
+    def test_blocking_vs_nonblocking_mttr(self):
+        el_b = mk(non_blocking_migration=False)
+        el_n = mk(non_blocking_migration=True)
+        for el in (el_b, el_n):
+            el.run(1)
+        t_b = el_b._apply_migrations([(3, 0, 1)], [(0, 2), (3, 7)])
+        t_n = el_n._apply_migrations([(3, 0, 1)], [(0, 2), (3, 7)])
+        assert t_n <= t_b
+
+
+class TestFailSlow:
+    def test_straggler_recovery_improves_time(self):
+        # enough micro-batches that the 1F1B steady state dominates (the
+        # minimax objective optimizes steady-state mini-step time)
+        el = VirtualCluster(CFG, dp=4, pp=2, global_batch=32, num_micro=8,
+                            seq_len=16, seed=0)
+        el.run(1)
+        t_before = el.simulate_step_time()
+        el.inject_fail_slow(0, 0, 1.6)
+        t_slow = el.simulate_step_time()
+        assert t_slow > t_before
+        el.recover_fail_slow(0, 0, 1.6)
+        t_after = el.simulate_step_time()
+        assert t_after < t_slow
+
+
+class TestOtherFamilies:
+    @pytest.mark.parametrize("family", ["moe", "ssm"])
+    def test_elastic_consistency(self, family):
+        """ElasWave's guarantees hold across model families (MoE routing and
+        SSD recurrences included)."""
+        cfg = R.tiny_config(family, dropout_rate=0.1) if family != "moe" else \
+            R.tiny_config(family, dropout_rate=0.1, capacity_factor=16.0)
+        base = VirtualCluster(cfg, dp=4, pp=2, global_batch=16, num_micro=2,
+                              seq_len=16, seed=0)
+        bl = base.run(4)
+        el = VirtualCluster(cfg, dp=4, pp=2, global_batch=16, num_micro=2,
+                            seq_len=16, seed=0)
+        losses = el.run(2)
+        el.recover_fail_stop(1, 0)
+        losses += el.run(2)
+        dev = np.abs(np.array(bl) - np.array(losses))
+        assert dev.max() < 1e-4, dev
+
+
+class TestScaleOut:
+    def test_shrink_then_regrow_trajectory(self, baseline_losses):
+        el = mk()
+        losses = el.run(2)
+        el.recover_fail_stop(1, 1)
+        losses += el.run(2)
+        el.recover_scale_out(1, 1)
+        losses += el.run(2)
+        dev = np.abs(np.array(baseline_losses) - np.array(losses))
+        assert dev.max() < 1e-4
+        # DP width restored
+        assert len(el.stages[1].dp_ranks) == 4
+        assert el.per_rank_mbs == [2, 2, 2, 2]
+
+
+class TestAgent:
+    def test_detects_fail_stop(self):
+        el = mk()
+        el.run(1)
+        el.inject_fail_stop(2, 1)
+        rec = el.detect_and_recover()
+        assert rec is not None and rec["total"] > 0
+        assert not el.alive[2, 1]
+        el.run(1)

@@ -1,0 +1,80 @@
+"""Dynamic communicator: in-place edits vs rebuilds."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.communicator import (DynamicCommunicator, build_hybrid_groups,
+                                     ring_links)
+
+
+class TestGroups:
+    def test_hybrid_group_shapes(self):
+        g = build_hybrid_groups(dp=4, pp=3)
+        assert len([k for k in g if k.startswith("dp_")]) == 3
+        assert len([k for k in g if k.startswith("pp_")]) == 4
+        for name, ranks in g.items():
+            assert len(set(ranks)) == len(ranks)
+
+
+class TestEdit:
+    def test_scale_down_touches_only_affected(self):
+        comm = DynamicCommunicator(build_hybrid_groups(dp=4, pp=4))
+        dead = 5  # (d=1, p=1)
+        st_ = comm.edit(remove=[dead])
+        assert st_.mode == "edit"
+        # the dead rank is gone from every group
+        for ranks in comm.groups.values():
+            assert dead not in ranks
+        # only the two groups containing the rank were touched:
+        # each ring loses 2 links, gains at most 1 (neighbor reconnect)
+        assert st_.links_created <= 2
+        assert st_.links_destroyed <= 4
+
+    def test_edit_faster_than_rebuilds(self):
+        for n in (8, 16, 32, 64):
+            groups = build_hybrid_groups(dp=n // 4, pp=4)
+            c1 = DynamicCommunicator(groups)
+            c2 = DynamicCommunicator(groups)
+            c3 = DynamicCommunicator(groups)
+            dead = 1
+            t_edit = c1.edit(remove=[dead]).seconds
+            t_part = c2.partial_rebuild(remove=[dead]).seconds
+            new_groups = {k: [r for r in v if r != dead]
+                          for k, v in c3.groups.items()}
+            t_full = c3.full_rebuild(new_groups).seconds
+            assert t_edit < t_part < t_full
+            assert t_edit < 1.0          # paper: sub-second
+
+    def test_scale_up_reuses_links(self):
+        comm = DynamicCommunicator({"g": [0, 1, 2]})
+        before = set(comm.links)
+        st_ = comm.edit(add=[("g", 3)])
+        assert st_.links_reused >= 1
+        assert 3 in comm.groups["g"]
+        # previously intact links still present unless displaced by the ring
+        assert before & comm.links
+
+    @given(st.integers(2, 6), st.integers(2, 6))
+    @settings(max_examples=30, deadline=None)
+    def test_links_consistent_after_edit(self, dp, pp):
+        comm = DynamicCommunicator(build_hybrid_groups(dp, pp))
+        comm.edit(remove=[0])
+        # invariant: links == union of ring links of all groups
+        want = set()
+        for g in comm.groups.values():
+            want |= ring_links(g)
+        assert want <= comm.links
+
+
+class TestMTTRScaling:
+    def test_edit_cost_flat_in_cluster_size(self):
+        """Paper: edit cost is O(degree), rebuilds grow with scale."""
+        times_edit, times_full = [], []
+        for dp in (2, 4, 8, 16):
+            groups = build_hybrid_groups(dp, 4)
+            c = DynamicCommunicator(groups)
+            times_edit.append(c.edit(remove=[1]).seconds)
+            c2 = DynamicCommunicator(groups)
+            ng = {k: [r for r in v if r != 1] for k, v in c2.groups.items()}
+            times_full.append(c2.full_rebuild(ng).seconds)
+        assert max(times_edit) / min(times_edit) < 1.5      # ~flat
+        assert times_full[-1] / times_full[0] > 4           # grows with scale

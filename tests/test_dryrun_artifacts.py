@@ -1,0 +1,90 @@
+"""Deliverable guards: the 80-cell dry-run artifact set is complete and
+internally consistent; the HLO collective parser handles the grammar."""
+import json
+from pathlib import Path
+
+import pytest
+
+from repro import configs
+from repro.launch import hlo_analysis as H
+
+ART = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+
+@pytest.mark.skipif(not ART.exists(), reason="dry-run not yet executed")
+class TestArtifacts:
+    def _load(self):
+        return {tuple(f.stem.split("__")): json.loads(f.read_text())
+                for f in ART.glob("*.json")}
+
+    def test_all_80_cells_present(self):
+        arts = self._load()
+        missing = []
+        for arch in configs.ARCH_IDS:
+            cfg = configs.get_config(arch)
+            for (shape, _, _) in cfg.shapes:
+                for mesh in ("single", "multi"):
+                    if (arch, shape, mesh) not in arts:
+                        missing.append((arch, shape, mesh))
+        assert not missing, missing
+
+    def test_skips_match_configs(self):
+        arts = self._load()
+        for arch in configs.ARCH_IDS:
+            cfg = configs.get_config(arch)
+            skip_names = {n for n, _ in cfg.skip_shapes}
+            for (shape, _, _) in cfg.shapes:
+                for mesh in ("single", "multi"):
+                    a = arts[(arch, shape, mesh)]
+                    if shape in skip_names:
+                        assert a["status"] == "skipped", (arch, shape)
+                    else:
+                        assert a["status"] == "ok", (arch, shape, mesh)
+
+    def test_ok_cells_have_roofline_terms(self):
+        for a in self._load().values():
+            if a["status"] != "ok":
+                continue
+            r = a["roofline"]
+            assert r["compute_s"] > 0 and r["memory_s"] > 0
+            assert r["bottleneck"] in ("compute", "memory", "collective")
+            assert a["chips"] == (512 if a["mesh"] == "multi" else 256)
+
+    def test_multi_pod_shards_state(self):
+        """pod axis actually shards: argument bytes/chip shrink vs single."""
+        arts = self._load()
+        for arch in ("llama3_405b", "deepseek_v3_671b", "deepseek_67b"):
+            s = arts[(arch, "train_4k", "single")]["memory_analysis"]
+            m = arts[(arch, "train_4k", "multi")]["memory_analysis"]
+            assert m["argument_size_in_bytes"] < 0.75 * s["argument_size_in_bytes"]
+
+
+class TestHloParser:
+    def test_parses_kinds_and_groups(self):
+        hlo = """
+  %ar = f32[128,256]{1,0} all-reduce(%x), replica_groups=[16,16]<=[256]
+  %ag = bf16[512,64]{1,0} all-gather(%y), replica_groups=[16,16]<=[256], dimensions={0}
+  %rs = f32[32,64]{1,0} reduce-scatter(%z), replica_groups={{0,1,2,3}}
+  %cp = bf16[8,8]{1,0} collective-permute(%w), source_target_pairs={{0,1}}
+"""
+        out = H.collective_bytes(hlo)
+        assert out["all-reduce"] == 128 * 256 * 4
+        assert out["all-gather"] == 512 * 64 * 2 / 16      # operand = result/G
+        assert out["reduce-scatter"] == 32 * 64 * 4 * 4    # operand = result*G
+        assert out["collective-permute"] == 8 * 8 * 2
+        assert out["total"] == sum(out[k] for k in H.COLLECTIVES)
+
+    def test_async_pairs_counted_once(self):
+        hlo = """
+  %s = f32[64,64]{1,0} all-reduce-start(%x), replica_groups={{0,1}}
+  %d = f32[64,64]{1,0} all-reduce-done(%s)
+"""
+        out = H.collective_bytes(hlo)
+        assert out["all-reduce"] == 64 * 64 * 4
+
+    def test_roofline_terms_bottleneck(self):
+        t = H.roofline_terms(flops=197e12, bytes_accessed=819e9 * 2,
+                             coll_bytes=50e9, chips=1)
+        assert t["bottleneck"] == "memory"
+        assert abs(t["memory_s"] - 2.0) < 1e-9
+        assert abs(t["compute_s"] - 1.0) < 1e-9

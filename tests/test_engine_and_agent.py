@@ -1,0 +1,84 @@
+"""Schedule engine + agent unit tests."""
+import numpy as np
+import pytest
+
+from repro.core.agent import Agent, Probe
+from repro.core.cost_model import HardwareSpec
+from repro.core.engine import ScheduleEngine
+from repro.core.events import ElasticEvent, EventKind
+from repro.models import registry as R
+
+
+class TestEngine:
+    def setup_method(self):
+        self.cfg = R.tiny_config("dense", num_layers=8)
+        self.engine = ScheduleEngine(self.cfg, seq=64,
+                                     hw=HardwareSpec(), mem_cap=1e12)
+
+    def _plan(self, **kw):
+        args = dict(dp=4, pp=2, global_batch=32, num_micro=2,
+                    layer_assignment=[(0, 3), (4, 7)],
+                    failed_dp_ranks=[1],
+                    old_sample_rank={i: i // 4 for i in range(16)})
+        args.update(kw)
+        ev = ElasticEvent(EventKind.FAIL_STOP, 10, (3,))
+        return self.engine.plan(ev, **args)
+
+    def test_plan_structure(self):
+        plan = self._plan()
+        assert plan.capacity_ok
+        assert plan.new_dp == 3
+        plan.dataflow.validate()
+        assert plan.graph.feasible
+        assert plan.plan_seconds < 0.5      # planning is cheap (paper: fast)
+
+    def test_unbalanced_widths_shift_layers(self):
+        """A narrower failed stage gets fewer layers (minimax rebalance)."""
+        plan = self._plan(stage_widths=[2, 4])
+        a0 = plan.graph.stage_ranges[0]
+        a1 = plan.graph.stage_ranges[1]
+        assert (a0[1] - a0[0]) < (a1[1] - a1[0])
+
+    def test_memory_infeasible_flagged(self):
+        eng = ScheduleEngine(self.cfg, seq=64, hw=HardwareSpec(), mem_cap=1.0)
+        ev = ElasticEvent(EventKind.FAIL_STOP, 10, (3,))
+        plan = eng.plan(ev, dp=4, pp=2, global_batch=32, num_micro=2,
+                        layer_assignment=[(0, 3), (4, 7)],
+                        failed_dp_ranks=[1],
+                        old_sample_rank={i: i // 4 for i in range(16)})
+        assert not plan.capacity_ok
+
+    def test_rng_plan_covers_moves(self):
+        plan = self._plan(stage_widths=[2, 4])
+        moved_layers = {lid for (lid, _, _) in plan.migrations}
+        rng_layers = {lid for (lid, _, _) in plan.rng.layer_stream_moves}
+        assert moved_layers == rng_layers
+
+
+class TestAgent:
+    def test_fail_stop_detection(self):
+        ag = Agent(num_ranks=4, miss_limit=2)
+        probes = [Probe(0, r, heartbeat=(r != 2), step_seconds=1.0)
+                  for r in range(4)]
+        assert ag.observe(probes) == []          # first miss: not yet
+        evs = ag.observe(probes)
+        assert len(evs) == 1
+        assert evs[0].kind == EventKind.FAIL_STOP and evs[0].ranks == (2,)
+        # no duplicate reports
+        assert ag.observe(probes) == []
+
+    def test_fail_slow_detection(self):
+        ag = Agent(num_ranks=4, window=4, slow_threshold=1.3)
+        evs = []
+        for step in range(6):
+            probes = [Probe(step, r, True, 2.0 if r == 1 else 1.0)
+                      for r in range(4)]
+            evs += ag.observe(probes)
+        kinds = [(e.kind, e.ranks) for e in evs]
+        assert (EventKind.FAIL_SLOW, (1,)) in kinds
+
+    def test_healthy_cluster_silent(self):
+        ag = Agent(num_ranks=8)
+        for step in range(10):
+            probes = [Probe(step, r, True, 1.0 + 0.01 * r) for r in range(8)]
+            assert ag.observe(probes) == []

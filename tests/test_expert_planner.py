@@ -1,0 +1,73 @@
+"""EP elasticity planner: LPT placement quality + reshard plan invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.planners.expert import (ExpertPlan, brute_force_placement,
+                                        lpt_placement, plan_expert_reshard)
+
+
+class TestLpt:
+    @given(st.lists(st.floats(0.1, 10.0), min_size=2, max_size=7),
+           st.integers(2, 3))
+    @settings(max_examples=60, deadline=None)
+    def test_within_lpt_bound_of_optimal(self, loads, W):
+        """LPT is a (4/3 - 1/3m)-approximation of minimax makespan."""
+        workers = list(range(W))
+        placement = lpt_placement(loads, workers)
+        got = {w: 0.0 for w in workers}
+        for e, w in placement.items():
+            got[w] += loads[e]
+        opt = brute_force_placement(loads, workers)
+        assert max(got.values()) <= opt * (4 / 3 - 1 / (3 * W)) + 1e-9
+
+    def test_every_expert_placed_once(self):
+        placement = lpt_placement([1.0] * 8, [0, 1, 2])
+        assert sorted(placement) == list(range(8))
+        assert set(placement.values()) <= {0, 1, 2}
+
+
+class TestReshard:
+    def test_orphans_recovered_survivors_pinned(self):
+        E, W = 8, 4
+        old = {e: e % W for e in range(E)}         # round robin
+        plan = plan_expert_reshard([1.0] * E, old, surviving=[0, 1, 3],
+                                   expert_bytes=1000,
+                                   snapshot_holder={e: (e % W + 1) % W
+                                                    for e in range(E)})
+        # every expert placed on a survivor
+        assert set(plan.placement.values()) <= {0, 1, 3}
+        # survivors' experts did not move
+        for e, w in old.items():
+            if w in (0, 1, 3):
+                assert plan.placement[e] == w
+        # orphaned experts (worker 2: experts 2, 6) moved, from snapshots
+        moved = {m.expert for m in plan.moves}
+        assert moved == {2, 6}
+        assert all(m.from_snapshot for m in plan.moves)
+        assert plan.est_seconds > 0
+
+    def test_hot_expert_balance(self):
+        """A hot expert's orphaned siblings land on the coldest workers."""
+        load = [10.0, 1.0, 1.0, 1.0]
+        old = {0: 0, 1: 0, 2: 1, 3: 1}
+        plan = plan_expert_reshard(load, old, surviving=[0, 1],
+                                   expert_bytes=10)
+        # pinned stay; nothing orphaned -> no moves
+        assert plan.moves == []
+        plan2 = plan_expert_reshard(load, {0: 2, 1: 0, 2: 0, 3: 1},
+                                    surviving=[0, 1], expert_bytes=10)
+        # hot orphan 0 goes to the lighter worker (1)
+        assert plan2.placement[0] == 1
+
+    @given(st.integers(3, 8), st.integers(2, 4))
+    @settings(max_examples=40, deadline=None)
+    def test_shrink_plan_complete(self, E, W):
+        old = {e: e % W for e in range(E)}
+        surviving = list(range(1, W))              # worker 0 dies
+        plan = plan_expert_reshard([1.0] * E, old, surviving, 64)
+        assert sorted(plan.placement) == list(range(E))
+        assert set(plan.placement.values()) <= set(surviving)
+        # exactly the orphans move
+        orphans = {e for e, w in old.items() if w == 0}
+        assert {m.expert for m in plan.moves} == orphans

@@ -1,0 +1,40 @@
+"""Interleaved-1F1B virtual-stage schedule."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.pipeline import (StageTiming, simulate_1f1b,
+                                 simulate_interleaved_1f1b)
+
+
+class TestInterleaved:
+    def test_bubble_shrinks_with_v(self):
+        st_ = [StageTiming(1.0, 2.0, 8)] * 8
+        base = simulate_1f1b(st_)
+        prev = base.step_time
+        for v in (2, 4):
+            r = simulate_interleaved_1f1b(st_, v=v)
+            assert r.step_time < prev
+            prev = r.step_time
+
+    def test_matches_theory(self):
+        """bubble fraction ~ (P-1)/(vM + P-1) for balanced interleaving."""
+        P, M, v = 4, 8, 2
+        st_ = [StageTiming(1.0, 2.0, M)] * P
+        r = simulate_interleaved_1f1b(st_, v=v)
+        work = M * 3.0
+        theory = work * (1 + (P - 1) / (v * M))
+        assert abs(r.step_time - theory) / theory < 0.05
+
+    def test_busy_work_conserved(self):
+        st_ = [StageTiming(1.0, 2.0, 8)] * 4
+        base = simulate_1f1b(st_)
+        inter = simulate_interleaved_1f1b(st_, v=2)
+        assert abs(sum(base.stage_busy) - sum(inter.stage_busy)) < 1e-9
+
+    @given(st.integers(2, 6), st.integers(2, 12), st.integers(2, 3))
+    @settings(max_examples=30, deadline=None)
+    def test_never_slower_than_plain(self, P, M, v):
+        st_ = [StageTiming(1.0, 2.0, M)] * P
+        base = simulate_1f1b(st_)
+        inter = simulate_interleaved_1f1b(st_, v=v)
+        assert inter.step_time <= base.step_time + 1e-9

@@ -1,0 +1,151 @@
+"""Unit + property tests for the four ElasWave planners."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.planners.dataflow import plan_dataflow
+from repro.core.planners.graph import (brute_force_partition,
+                                       minimax_layer_partition)
+from repro.core.planners.dvfs import (ACHIEVABLE, UNACHIEVABLE,
+                                      bisect_min_feasible, plan_dvfs)
+from repro.core.planners.rng import plan_rng_reshard, verify_equivalence
+
+
+# ---------------------------------------------------------------- dataflow --
+class TestDataflow:
+    def test_paper_example(self):
+        """Paper §4.1: DP=3, mbs=2 -> DP=2, mbs=3; product invariant."""
+        plan = plan_dataflow(global_batch=6, num_micro_batches=1, surviving_dp=2)
+        assert plan.micro_batch_sizes == (3, 3)
+        assert sum(plan.micro_batch_sizes) * plan.num_micro_batches == 6
+
+    def test_uneven_split_weights(self):
+        plan = plan_dataflow(global_batch=16, num_micro_batches=2, surviving_dp=3)
+        assert sum(plan.micro_batch_sizes) == 8
+        assert abs(sum(plan.grad_weights) - 1.0) < 1e-12
+        # weights proportional to sizes
+        for s, w in zip(plan.micro_batch_sizes, plan.grad_weights):
+            assert abs(w - s / 8) < 1e-12
+
+    @given(st.integers(1, 64), st.integers(1, 8), st.integers(1, 16))
+    @settings(max_examples=100, deadline=None)
+    def test_global_batch_invariant(self, per_micro, num_micro, dp):
+        gb = per_micro * num_micro
+        plan = plan_dataflow(gb, num_micro, dp)
+        plan.validate()
+        assert max(plan.micro_batch_sizes) - min(plan.micro_batch_sizes) <= 1
+
+
+# ------------------------------------------------------------------- graph --
+def _mk_costs(layer_costs, layer_mems):
+    pre_c = np.concatenate([[0], np.cumsum(layer_costs)])
+    pre_m = np.concatenate([[0], np.cumsum(layer_mems)])
+
+    def t(p, a, b):
+        return float(pre_c[b + 1] - pre_c[a])
+
+    def mem(p, a, b):
+        return float(pre_m[b + 1] - pre_m[a])
+
+    return t, mem
+
+
+class TestMinimaxPartition:
+    def test_balanced_uniform(self):
+        t, mem = _mk_costs([1.0] * 8, [1.0] * 8)
+        plan = minimax_layer_partition(8, 4, t, mem, [100] * 4)
+        assert plan.feasible
+        assert plan.layers_per_stage == (2, 2, 2, 2)
+        assert plan.worst_mini_step == 2.0
+
+    def test_memory_infeasible(self):
+        t, mem = _mk_costs([1.0] * 4, [10.0] * 4)
+        # caps allow 2 layers per stage -> feasible balanced split
+        plan = minimax_layer_partition(4, 2, t, mem, [25.0, 25.0])
+        assert plan.feasible and plan.layers_per_stage == (2, 2)
+        # caps allow at most 1 layer per stage -> 4 layers over 2 stages fail
+        plan = minimax_layer_partition(4, 2, t, mem, [15.0, 15.0])
+        assert not plan.feasible
+
+    def test_respects_caps(self):
+        t, mem = _mk_costs([1, 1, 1, 1], [4, 1, 1, 1])
+        plan = minimax_layer_partition(4, 2, t, mem, [4.0, 100.0])
+        assert plan.feasible
+        a, b = plan.stage_ranges[0]
+        assert mem(0, a, b) <= 4.0
+
+    @given(st.lists(st.floats(0.1, 10), min_size=4, max_size=9),
+           st.integers(2, 4))
+    @settings(max_examples=60, deadline=None)
+    def test_matches_bruteforce(self, costs, P):
+        if len(costs) < P:
+            return
+        mems = [1.0] * len(costs)
+        t, mem = _mk_costs(costs, mems)
+        caps = [100.0] * P
+        dp = minimax_layer_partition(len(costs), P, t, mem, caps)
+        bf = brute_force_partition(len(costs), P, t, mem, caps)
+        assert dp.feasible == bf.feasible
+        if dp.feasible:
+            assert abs(dp.worst_mini_step - bf.worst_mini_step) < 1e-9
+
+    @given(st.lists(st.floats(0.5, 5), min_size=6, max_size=8),
+           st.lists(st.floats(0.5, 3), min_size=6, max_size=8))
+    @settings(max_examples=40, deadline=None)
+    def test_matches_bruteforce_with_caps(self, costs, mems):
+        n = min(len(costs), len(mems))
+        costs, mems = costs[:n], mems[:n]
+        P = 3
+        if n < P:
+            return
+        t, mem = _mk_costs(costs, mems)
+        caps = [sum(mems) / P * 1.5] * P
+        dp = minimax_layer_partition(n, P, t, mem, caps)
+        bf = brute_force_partition(n, P, t, mem, caps)
+        assert dp.feasible == bf.feasible
+        if dp.feasible:
+            assert abs(dp.worst_mini_step - bf.worst_mini_step) < 1e-9
+
+
+# -------------------------------------------------------------------- dvfs --
+class TestDvfs:
+    def test_already_aligned(self):
+        plan = plan_dvfs(lambda f: 1.0, 1.0, 1.2, target=1.0, eps=0.05,
+                         df_min=0.01)
+        assert plan.status == ACHIEVABLE and plan.freq == 1.0
+
+    def test_unachievable(self):
+        # even at f_max the stage lags
+        plan = plan_dvfs(lambda f: 2.0 / f, 1.0, 1.2, target=1.0, eps=0.01,
+                         df_min=0.01)
+        assert plan.status == UNACHIEVABLE and plan.freq == 1.2
+
+    def test_minimum_uplift(self):
+        # time = 1.15/f; need <= 1.0 -> f* = 1.15
+        plan = plan_dvfs(lambda f: 1.15 / f, 1.0, 1.2, target=1.0, eps=0.0,
+                         df_min=0.001)
+        assert plan.status == ACHIEVABLE
+        assert 1.15 <= plan.freq <= 1.16
+
+    @given(st.floats(1.0, 1.2), st.floats(0.001, 0.05))
+    @settings(max_examples=50, deadline=None)
+    def test_bisect_bound(self, f_needed, df_min):
+        f = bisect_min_feasible(1.0, 1.2, lambda x: x >= f_needed, df_min)
+        assert f >= f_needed - 1e-9
+        assert f <= min(1.2, f_needed + max(df_min, 1e-9) + 1e-9)
+
+
+# --------------------------------------------------------------------- rng --
+class TestRngPlanner:
+    def test_stream_moves(self):
+        plan = plan_rng_reshard(
+            old_layer_stage=[0, 0, 1, 1], new_layer_stage=[0, 1, 1, 1],
+            old_sample_rank={0: 0, 1: 1, 2: 2}, new_sample_rank={0: 0, 1: 0, 2: 1})
+        assert plan.layer_stream_moves == ((1, 0, 1),)
+        assert (1, 1, 0) in plan.sample_stream_moves
+        assert plan.transfer_bytes == 3 * 16
+
+    def test_equivalence(self):
+        import jax
+        assert verify_equivalence(jax.random.key(0), step=3,
+                                  layer_ids=range(4), sample_ids=range(8))

@@ -1,0 +1,170 @@
+"""ZeRO layouts, migration plans, snapshot, live remap — unit + property."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import zero
+from repro.core.fabric.remap import IntegrityError, LiveRemap
+from repro.core.fabric.snapshot import SnapshotPool
+from repro.optim.adam import AdamConfig, adam_update_flat
+
+
+# -------------------------------------------------------------- zero layout --
+class TestLayouts:
+    @given(st.lists(st.integers(8, 200), min_size=1, max_size=6),
+           st.integers(1, 8), st.sampled_from(["contiguous", "interleaved"]))
+    @settings(max_examples=80, deadline=None)
+    def test_partition_exact(self, sizes, dp, kind):
+        lay = zero.Layout(kind, tuple(sizes), dp)
+        covered = []
+        for j in range(dp):
+            covered += lay.owner_intervals(j)
+        covered.sort()
+        # exact disjoint cover of [0, total)
+        cur = 0
+        for s, e in covered:
+            assert s == cur
+            cur = e
+        assert cur == lay.total
+
+    def test_interleaved_same_rank_owns_every_layer(self):
+        lay = zero.Layout("interleaved", (40, 80, 120), 4)
+        ivs = lay.owner_intervals(2)
+        assert len(ivs) == 3      # one shard per layer
+
+
+class TestMigrationPlan:
+    @given(st.lists(st.integers(64, 512), min_size=2, max_size=5),
+           st.integers(2, 6))
+    @settings(max_examples=60, deadline=None)
+    def test_interleaved_is_pure_p2p(self, sizes, dp):
+        pos = len(sizes) // 2
+        plan = zero.migration_plan("interleaved", sizes, pos, dp, 0, 1, sizes[:1])
+        assert all(not t.intra_stage for t in plan)
+        assert len(plan) == dp
+        assert sum(t.nbytes for t in plan) == sizes[pos]
+        # disjoint rank-to-rank: src == dst index
+        assert all(t.src_rank == t.dst_rank for t in plan)
+
+    @given(st.lists(st.integers(64, 512), min_size=2, max_size=5),
+           st.integers(2, 6))
+    @settings(max_examples=60, deadline=None)
+    def test_contiguous_costs_more(self, sizes, dp):
+        pos = len(sizes) // 2
+        plan_c = zero.migration_plan("contiguous", sizes, pos, dp, 0, 1, sizes[:1])
+        b = zero.plan_bytes(plan_c)
+        # cross-stage bytes = the migrating layer exactly
+        assert b["cross_stage"] == sizes[pos]
+        # intra-stage resharding appears for dp > 1 (unless cuts align)
+        theo = zero.theoretical_bytes("contiguous", sizes[pos], dp)
+        inter = zero.theoretical_bytes("interleaved", sizes[pos], dp)
+        assert inter == sizes[pos]
+        assert b["total"] >= inter  # contiguous never cheaper
+        # theoretical closed form is an upper-bound-ish estimate
+        assert b["total"] <= theo * 2.5 + 64
+
+
+# ---------------------------------------------------------------- snapshot --
+class TestSnapshot:
+    def test_ring_identity_after_steps(self):
+        """Host snapshot == neighbor device state after every step."""
+        import jax.numpy as jnp
+        n, m = 4, 64
+        rng = np.random.default_rng(0)
+        adam = AdamConfig()
+        states = [{"master": rng.normal(size=m).astype(np.float32),
+                   "mu": np.zeros(m, np.float32), "nu": np.zeros(m, np.float32)}
+                  for _ in range(n)]
+        pool = SnapshotPool(n, adam)
+        pool.bootstrap(0, states)
+        for step in range(1, 4):
+            grads = [rng.normal(size=m).astype(np.float32) for _ in range(n)]
+            # device updates
+            for j in range(n):
+                _, new = adam_update_flat(jnp.asarray(grads[j]),
+                                          {k: jnp.asarray(v) for k, v in states[j].items()},
+                                          step, adam)
+                states[j] = {k: np.asarray(v) for k, v in new.items()}
+            pool.snapshot_step(step, grads, step)
+            for i in range(n):
+                j = pool.backup_rank(i)
+                for comp in ("master", "mu", "nu"):
+                    np.testing.assert_array_equal(pool.host[i][comp],
+                                                  states[j][comp])
+
+    def test_grad_bytes_4x_smaller(self):
+        pool = SnapshotPool(2, AdamConfig())
+        pool.bootstrap(0, [{"master": np.zeros(10, np.float32),
+                            "mu": np.zeros(10, np.float32),
+                            "nu": np.zeros(10, np.float32)}] * 2)
+        st_ = pool.snapshot_step(1, [np.zeros(10, np.float32)] * 2, 1)
+        assert st_.state_bytes_equiv >= 3 * st_.grad_bytes_sent
+
+    def test_bf16_compression_halves_bytes_bounded_drift(self):
+        import jax.numpy as jnp
+        rng = np.random.default_rng(1)
+        n, m = 2, 256
+        states = [{"master": rng.normal(size=m).astype(np.float32),
+                   "mu": np.zeros(m, np.float32), "nu": np.zeros(m, np.float32)}
+                  for _ in range(n)]
+        exact = SnapshotPool(n, AdamConfig())
+        comp = SnapshotPool(n, AdamConfig(), compress="bf16")
+        exact.bootstrap(0, states)
+        comp.bootstrap(0, states)
+        grads = [rng.normal(size=m).astype(np.float32) for _ in range(n)]
+        s1 = exact.snapshot_step(1, grads, 1)
+        s2 = comp.snapshot_step(1, grads, 1)
+        assert s2.grad_bytes_sent * 2 == s1.grad_bytes_sent
+        # drift bounded by bf16 rounding through one Adam step
+        for i in range(n):
+            d = np.abs(exact.host[i]["master"] - comp.host[i]["master"]).max()
+            assert d < 1e-4, d
+
+
+# -------------------------------------------------------------- live remap --
+class TestLiveRemap:
+    def _setup(self, total, dp, kind):
+        lay = zero.Layout(kind, (total,), dp) if kind == "contiguous" else \
+            zero.Layout(kind, (total // 2, total - total // 2), dp)
+        return lay
+
+    @given(st.integers(2, 6), st.integers(0, 5),
+           st.sampled_from(["contiguous", "interleaved"]))
+    @settings(max_examples=60, deadline=None)
+    def test_shrink_preserves_state(self, dp, fail_idx, kind):
+        if fail_idx >= dp or dp < 2:
+            return
+        sizes = (96, 160)
+        lay = zero.Layout(kind, sizes, dp)
+        total = lay.total
+        truth = np.arange(total, dtype=np.float32)
+        surviving = [r for r in range(dp) if r != fail_idx]
+        device_parts = {r: lay.owner_intervals(r) for r in surviving}
+        host_parts = {fail_idx: lay.owner_intervals(fail_idx)}
+        new_lay = zero.Layout(kind, sizes, dp - 1)
+        target = {r: new_lay.owner_intervals(j) for j, r in enumerate(surviving)}
+        rm = LiveRemap()
+        plan = rm.compute_plan(total, device_parts, host_parts, target)
+        # every target byte covered exactly once
+        m = plan.overlap_matrix(dp)
+        assert m.sum() == total
+
+        def segs_for(parts):
+            return {r: { (s, e): truth[s:e] for (s, e) in ivs }
+                    for r, ivs in parts.items()}
+
+        out = rm.execute(plan, total, segs_for(device_parts), segs_for(host_parts))
+        # reassemble and compare
+        rebuilt = np.zeros(total, np.float32)
+        for j, r in enumerate(surviving):
+            off = 0
+            shard = out[r]
+            for s, e in new_lay.owner_intervals(j):
+                rebuilt[s:e] = shard[off:off + (e - s)]
+                off += e - s
+        np.testing.assert_array_equal(rebuilt, truth)
+
+    def test_integrity_failure_detected(self):
+        rm = LiveRemap()
+        with pytest.raises(IntegrityError):
+            rm.integrity_check(100, {0: [(0, 40)]}, {1: [(50, 100)]})
