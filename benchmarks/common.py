@@ -1,4 +1,9 @@
-"""Shared benchmark fixtures: the paper's Table-2 workloads + helpers."""
+"""Shared benchmark fixtures: the paper's Table-2 workloads + helpers.
+
+The view-building / shrink-pattern logic lives in ``repro.scenarios.spec``
+(the scenario engine is the canonical implementation); this module keeps the
+workload tables and thin compatibility wrappers for the benchmark scripts.
+"""
 from __future__ import annotations
 
 import time
@@ -9,6 +14,7 @@ import numpy as np
 from repro.core.cost_model import HardwareSpec, SegmentCosts
 from repro.core.policies import ClusterView
 from repro.models.config import ModelConfig
+from repro.scenarios.spec import AnalyticWorkload, node_shrink_cells
 
 # Paper Table 2 — Llama-2 workloads on 96 NPUs (TP=4 fixed; workers = TP
 # groups; one node = 8 NPUs = 2 workers).
@@ -35,37 +41,26 @@ WORKER_HW = HardwareSpec(peak_flops=4 * 376e12 / 2, hbm_bw=4 * 1.6e12,
                          link_bw=25e9, hbm_bytes=4 * 32e9, mfu=0.4)
 
 
+def analytic_workload(w: Dict, mem_cap=None) -> AnalyticWorkload:
+    """A Table-2 workload dict as a scenario-engine AnalyticWorkload."""
+    return AnalyticWorkload(cfg=w["cfg"], dp=w["dp"], pp=w["pp"], mbs=w["mbs"],
+                            global_batch=w["global_batch"], seq=w["seq"],
+                            hw=WORKER_HW, mem_cap=mem_cap)
+
+
 def build_view(w: Dict, alive=None, slow=None, mem_cap=None) -> Tuple[SegmentCosts, ClusterView]:
-    cfg, dp, pp = w["cfg"], w["dp"], w["pp"]
-    seg = SegmentCosts.build(cfg, w["seq"], WORKER_HW)
-    num_micro = w["global_batch"] // (w["mbs"] * dp)
-    L = cfg.num_layers
-    per = L // pp
-    rem = L % pp
-    ranges, a = [], 0
-    for p in range(pp):
-        b = a + per + (1 if p < rem else 0) - 1
-        ranges.append((a, b)); a = b + 1
-    view = ClusterView(
-        dp=dp, pp=pp, global_batch=w["global_batch"], num_micro=num_micro,
-        seq=w["seq"], layer_assignment=ranges,
-        alive=alive if alive is not None else np.ones((dp, pp), bool),
-        freq=np.ones((dp, pp)), slow=slow if slow is not None else np.ones((dp, pp)),
-        mem_cap=mem_cap if mem_cap is not None else WORKER_HW.hbm_bytes)
-    return seg, view
+    wl = analytic_workload(w, mem_cap=mem_cap)
+    seg = wl.build_seg()
+    return seg, wl.build_view(seg, alive=alive, slow=slow)
 
 
 def kill_nodes(view: ClusterView, n_nodes: int):
     """One node = 2 workers: kill cells (d, p) pairs replica-major, matching
-    the paper's shrink pattern (distinct replicas first)."""
-    killed = 0
-    d = 0
-    while killed < 2 * n_nodes and d < view.dp:
-        for p in (0, 1):
-            if killed < 2 * n_nodes:
-                view.alive[d % view.dp, (p + d) % view.pp] = False
-                killed += 1
-        d += 1
+    the paper's shrink pattern (distinct replicas first).  The cell sequence
+    is ``repro.scenarios.spec.node_shrink_cells`` — shared with the scenario
+    engine's capacity-trace events."""
+    for d, p in node_shrink_cells(n_nodes, view.dp, view.pp):
+        view.alive[d, p] = False
     return view
 
 

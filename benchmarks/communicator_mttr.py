@@ -1,27 +1,37 @@
 """Fig. 12b — communication-group recovery time: Dynamic Communicator
-(in-place edit) vs partial vs full rebuild, 8..64 ranks."""
+(in-place edit) vs partial vs full rebuild, 8..64 ranks.
+
+Thin wrapper over the scenario engine: each rank count becomes a one-event
+fail-stop scenario; the ``AnalyticScenarioRunner`` prices all three recovery
+modes from identical pre-event communicator state (``clone()``) and records
+them in the recovery record's communicator accounting.
+"""
 from __future__ import annotations
 
 import time
 
-from repro.core.communicator import DynamicCommunicator, build_hybrid_groups
-from .common import emit
+from repro.core.events import EventKind
+from repro.core.policies import ElasWavePolicy
+from repro.scenarios import AnalyticScenarioRunner, Scenario
+from .common import LLAMA2, WORKER_HW, analytic_workload, emit
 
 
 def run(verbose=True):
     rows = []
+    base = LLAMA2["llama2-7b"]
     for n_ranks in (8, 16, 32, 64):
         dp = max(n_ranks // 4, 2)
         pp = n_ranks // dp
-        groups = build_hybrid_groups(dp, pp)
-        dead = 1
-        c1 = DynamicCommunicator(groups)
-        t_edit = c1.edit(remove=[dead]).seconds
-        c2 = DynamicCommunicator(groups)
-        t_part = c2.partial_rebuild(remove=[dead]).seconds
-        c3 = DynamicCommunicator(groups)
-        ng = {k: [r for r in v if r != dead] for k, v in c3.groups.items()}
-        t_full = c3.full_rebuild(ng).seconds
+        wl = analytic_workload({**base, "dp": dp, "pp": pp})
+        dead = 1          # rank 1 = (d=0, p=1)
+        scn = Scenario.single(f"comm_{n_ranks}ranks", EventKind.FAIL_STOP,
+                              step=0, ranks=(dead,), horizon=1)
+        res = AnalyticScenarioRunner(
+            scn, wl, ElasWavePolicy(WORKER_HW)).run()
+        acct = res.recoveries[0]["communicator"]
+        t_edit = acct["edit_seconds"]
+        t_part = acct["partial_rebuild_seconds"]
+        t_full = acct["full_rebuild_seconds"]
         rows.append((n_ranks, t_edit, t_part, t_full))
         if verbose:
             print(f"  ranks={n_ranks:3d} edit={t_edit:.3f}s "

@@ -1,37 +1,46 @@
 """Fig. 15a — fail-slow (straggler) mitigation at Low/Medium/High severity.
 
 One worker is slowed by 1.1/1.25/1.45x; ElasWave rebalances layers + DVFS.
-Reported: normalized throughput before mitigation vs after."""
+Reported: normalized throughput before mitigation vs after.
+
+Thin wrapper over the scenario engine: each severity is a one-event
+FAIL_SLOW scenario replayed twice through ``AnalyticScenarioRunner`` — once
+with the mitigation axes disabled (``use_dvfs=False, use_migration=False``)
+and once with the full multi-dimensional replan.
+"""
 from __future__ import annotations
 
 import time
 
-import numpy as np
-
+from repro.core.events import EventKind
 from repro.core.policies import ElasWavePolicy
-from .common import LLAMA2, WORKER_HW, build_view, emit
+from repro.scenarios import AnalyticScenarioRunner, Scenario
+from .common import LLAMA2, WORKER_HW, analytic_workload, emit
 
 LEVELS = {"low": 1.1, "medium": 1.25, "high": 1.45}
+STRAGGLER = (1, 2)     # (dp replica, stage)
 
 
 def run(verbose=True):
     w = LLAMA2["llama2-13b"]
-    seg, view0 = build_view(w)
-    base = ElasWavePolicy(WORKER_HW).decide(seg, view0)
-    thr0 = w["global_batch"] / base.step_time
+    wl = analytic_workload(w)
+    reference = ElasWavePolicy(WORKER_HW)
     rows = []
     for name, f in LEVELS.items():
+        scn = Scenario.single(f"failslow_{name}", EventKind.FAIL_SLOW, step=0,
+                              ranks=(wl.rank(*STRAGGLER),), horizon=1,
+                              slow_factor=f)
         # unmitigated: straggler gates its stage; no replan
-        seg, view = build_view(w)
-        view.slow[1, 2] = f
-        unmit = ElasWavePolicy(WORKER_HW, use_dvfs=False,
-                               use_migration=False).decide(seg, view)
-        thr_unmit = w["global_batch"] / unmit.step_time / thr0
+        unmit = AnalyticScenarioRunner(
+            scn, wl, ElasWavePolicy(WORKER_HW, use_dvfs=False,
+                                    use_migration=False),
+            reference_policy=reference).run()
+        thr_unmit = unmit.steps[-1]["rel_throughput"]
         # mitigated: full multi-dim replan
-        seg, view = build_view(w)
-        view.slow[1, 2] = f
-        mit = ElasWavePolicy(WORKER_HW).decide(seg, view)
-        thr_mit = w["global_batch"] / mit.step_time / thr0
+        mit = AnalyticScenarioRunner(
+            scn, wl, ElasWavePolicy(WORKER_HW),
+            reference_policy=reference).run()
+        thr_mit = mit.steps[-1]["rel_throughput"]
         recoup = (thr_mit - thr_unmit) / max(1 - thr_unmit, 1e-9)
         rows.append((name, f, thr_unmit, thr_mit, recoup))
         if verbose:

@@ -9,7 +9,8 @@ import traceback
 def main() -> None:
     from . import (communicator_mttr, convergence_consistency, failslow,
                    lse_breakdown, migration_mttr, moe_case, roofline,
-                   snapshot_overhead, spot_trace, throughput_failstop)
+                   scenarios_suite, snapshot_overhead, spot_trace,
+                   throughput_failstop)
     print("name,us_per_call,derived")
     mods = [
         ("fig11", throughput_failstop),
@@ -22,6 +23,7 @@ def main() -> None:
         ("fig15a", failslow),
         ("sec7.7", moe_case),
         ("roofline", roofline),
+        ("scenarios", scenarios_suite),
     ]
     failed = []
     for name, mod in mods:

@@ -1,0 +1,54 @@
+"""Scenario suite — the named cluster-mode scenarios the pre-engine scripts
+could not express (concurrent burst, shrink-then-regrow rejoin, cascading
+fail-slow with DVFS absorption), run end-to-end on the VirtualCluster with
+real numerics.
+
+Emits one row with the headline shape of each scenario; pass
+``--artifacts-dir`` (via ``main(artifacts_dir=...)``) to keep the JSON
+records.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.scenarios import get_scenario, run_scenario
+from .common import emit
+
+SUITE = ("concurrent_burst", "shrink_regrow", "cascading_failslow")
+
+
+def run(verbose=True, artifacts_dir=None):
+    results = {}
+    for name in SUITE:
+        res = run_scenario(*get_scenario(name))
+        results[name] = res
+        if artifacts_dir:
+            res.write(artifacts_dir)
+        if verbose:
+            s = res.summary
+            print(f"  {name}: recoveries={s['n_recoveries']} "
+                  f"mttr={s['mttr_total']:.3f}s "
+                  f"loss {s['first_loss']:.3f}->{s['final_loss']:.3f}")
+    return results
+
+
+def main(artifacts_dir=None):
+    t0 = time.perf_counter()
+    results = run(artifacts_dir=artifacts_dir)
+    us = (time.perf_counter() - t0) * 1e6 / max(len(results), 1)
+    burst = results["concurrent_burst"]
+    regrow = results["shrink_regrow"]
+    widths = [s["dp_width"] for s in regrow.steps]
+    casc = results["cascading_failslow"]
+    t_series = [s["step_time"] for s in casc.steps]
+    # DVFS absorption: step time after the setpoint < peak degraded time
+    absorbed = t_series[-1] < max(t_series)
+    emit("scenario_suite", us,
+         f"burst_mttr={burst.mttr_total:.2f}s;"
+         f"rejoin_width={widths[0]}->{min(widths)}->{widths[-1]};"
+         f"dvfs_absorbed={absorbed}")
+    return results
+
+
+if __name__ == "__main__":
+    main()

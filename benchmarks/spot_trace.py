@@ -3,15 +3,20 @@
 Trace A: plateau-heavy (long stable windows, occasional shrink/regrow).
 Trace B: shrink-heavy (frequent preemptions).  Capacity pattern follows the
 SpotServe-style traces the paper replays.  Each policy pays its own MTTR on
-every capacity change (TorchFT: restart ~20 s; ReCycle/ElasWave: online)."""
+every capacity change (TorchFT: restart ~20 s; ReCycle/ElasWave: online).
+
+Thin wrapper over the scenario engine: ``Scenario.from_capacity_trace``
+turns each (duration, nodes_down) segment list into timed SCALE_IN /
+SCALE_OUT delta events, and ``AnalyticScenarioRunner`` integrates throughput
+over the intervals, charging ``MTTR[policy]`` per capacity change.
+"""
 from __future__ import annotations
 
 import time
 
-import numpy as np
-
 from repro.core.policies import ElasWavePolicy, ReCyclePolicy, TorchFTPolicy
-from .common import LLAMA2, WORKER_HW, build_view, kill_nodes, emit
+from repro.scenarios import AnalyticScenarioRunner, Scenario
+from .common import LLAMA2, WORKER_HW, analytic_workload, emit
 
 # (duration_s, nodes_down) segments
 TRACE_A = [(600, 0), (300, 1), (900, 1), (120, 2), (600, 1), (900, 0)]
@@ -21,24 +26,20 @@ TRACE_B = [(180, 0), (120, 1), (120, 2), (180, 3), (120, 2), (120, 3),
 MTTR = {"elaswave": 1.2, "recycle": 3.0, "torchft": 20.0}
 
 
-def run_trace(w, trace, pol):
-    seg, view0 = build_view(w)
-    base = ElasWavePolicy(WORKER_HW).decide(seg, view0)
-    thr0 = w["global_batch"] / base.step_time
-    total_samples = 0.0
-    total_time = 0.0
-    prev_down = None
-    for dur, down in trace:
-        seg, view = build_view(w)
-        kill_nodes(view, down)
-        d = pol.decide(seg, view)
-        thr = w["global_batch"] / d.step_time if d.feasible and \
-            np.isfinite(d.step_time) else 0.0
-        pay = MTTR[pol.name] if prev_down is not None and down != prev_down else 0.0
-        total_samples += thr * max(dur - pay, 0)
-        total_time += dur
-        prev_down = down
-    return total_samples / total_time / thr0
+def run_trace(w, trace, pol, name: str = "spot"):
+    """Time-averaged throughput of ``pol`` on a capacity trace, normalized to
+    the fault-free ElasWave baseline (historical signature, kept for
+    examples/spot_trace_replay.py)."""
+    return replay(w, trace, pol, name).summary["time_avg_rel_throughput"]
+
+
+def replay(w, trace, pol, name: str = "spot"):
+    """Full scenario-engine replay returning the ScenarioResult artifact."""
+    wl = analytic_workload(w)
+    scn = Scenario.from_capacity_trace(name, trace, dp=wl.dp, pp=wl.pp)
+    return AnalyticScenarioRunner(
+        scn, wl, pol, reference_policy=ElasWavePolicy(WORKER_HW),
+        mttr_model=MTTR).run()
 
 
 def run(verbose=True):
@@ -48,7 +49,8 @@ def run(verbose=True):
             vals = {}
             for pol in (ElasWavePolicy(WORKER_HW), ReCyclePolicy(),
                         TorchFTPolicy()):
-                vals[pol.name] = run_trace(w, trace, pol)
+                vals[pol.name] = run_trace(w, trace, pol,
+                                           name=f"{tname}_{wname}")
             rows.append((tname, wname, vals))
             if verbose:
                 print(f"  {tname} {wname}: " + " ".join(

@@ -1,37 +1,48 @@
 """Fig. 11 — throughput under fail-stop shrinks (1/2/3 nodes) for the three
-Llama-2 workloads, ElasWave vs ReCycle vs TorchFT."""
+Llama-2 workloads, ElasWave vs ReCycle vs TorchFT.
+
+Thin wrapper over the scenario engine: each (workload, shrink) pair is a
+one-event SCALE_IN scenario replayed through ``AnalyticScenarioRunner`` for
+every policy; rows keep the historical (wname, shrink, policy,
+rel_throughput, feasible, decide_seconds) schema.
+"""
 from __future__ import annotations
 
 import time
 
-import numpy as np
-
+from repro.core.events import EventKind
 from repro.core.policies import ElasWavePolicy, ReCyclePolicy, TorchFTPolicy
-from .common import LLAMA2, WORKER_HW, build_view, kill_nodes, emit
+from repro.scenarios import AnalyticScenarioRunner, Scenario, node_shrink_cells
+from .common import LLAMA2, WORKER_HW, analytic_workload, emit
+
+
+def shrink_scenario(w, n_nodes: int) -> Scenario:
+    if n_nodes == 0:
+        return Scenario(f"failstop_shrink0", (), horizon=1)
+    ranks = tuple(d * w["pp"] + p
+                  for d, p in node_shrink_cells(n_nodes, w["dp"], w["pp"]))
+    return Scenario.single(f"failstop_shrink{n_nodes}", EventKind.SCALE_IN,
+                           step=0, ranks=ranks, horizon=1)
 
 
 def run(verbose: bool = True):
     rows = []
     policies = [ElasWavePolicy(WORKER_HW), ReCyclePolicy(), TorchFTPolicy()]
+    reference = ElasWavePolicy(WORKER_HW)
     for wname, w in LLAMA2.items():
-        seg, view0 = build_view(w)
-        base = ElasWavePolicy(WORKER_HW).decide(seg, view0)
-        thr0 = w["global_batch"] / base.step_time
+        wl = analytic_workload(w)
         for shrink in (0, 1, 2, 3):
+            scn = shrink_scenario(w, shrink)
             for pol in policies:
-                seg, view = build_view(w)
-                kill_nodes(view, shrink)
-                t0 = time.perf_counter()
-                d = pol.decide(seg, view)
-                dt = time.perf_counter() - t0
-                thr = w["global_batch"] / d.step_time if d.feasible and \
-                    np.isfinite(d.step_time) else 0.0
-                rows.append((wname, shrink, pol.name, thr / thr0,
-                             d.feasible, dt))
+                res = AnalyticScenarioRunner(
+                    scn, wl, pol, reference_policy=reference).run()
+                rec = res.steps[-1]
+                rows.append((wname, shrink, pol.name, rec["rel_throughput"],
+                             rec["feasible"], rec["decide_wall_seconds"]))
                 if verbose:
                     print(f"  {wname} shrink={shrink} {pol.name:9s} "
-                          f"rel_throughput={thr / thr0:.3f} "
-                          f"feasible={d.feasible}")
+                          f"rel_throughput={rec['rel_throughput']:.3f} "
+                          f"feasible={rec['feasible']}")
     # derived: ElasWave gain over baselines at 1-node shrink on 34B
     d = {(r[0], r[1], r[2]): r[3] for r in rows}
     g_re = d[("llama2-34b", 1, "elaswave")] / max(d[("llama2-34b", 1, "recycle")], 1e-9)

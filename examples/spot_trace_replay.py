@@ -1,7 +1,9 @@
 """Replay a spot-instance capacity trace against the three recovery policies
-(paper Fig. 14) and print the time-averaged throughput.
+(paper Fig. 14) through the scenario engine, print the time-averaged
+throughput, and optionally dump the full per-interval JSON artifacts.
 
-    PYTHONPATH=src python examples/spot_trace_replay.py [--model llama2-13b]
+    PYTHONPATH=src python examples/spot_trace_replay.py \
+        [--model llama2-13b] [--artifacts-dir out/]
 """
 import argparse
 import sys
@@ -9,15 +11,16 @@ from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1]))  # repo root
 
-from benchmarks.common import LLAMA2
-from benchmarks.spot_trace import TRACE_A, TRACE_B, run_trace
-from benchmarks.common import WORKER_HW
+from benchmarks.common import LLAMA2, WORKER_HW
+from benchmarks.spot_trace import TRACE_A, TRACE_B, replay
 from repro.core.policies import ElasWavePolicy, ReCyclePolicy, TorchFTPolicy
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--model", default="llama2-13b", choices=list(LLAMA2))
+    ap.add_argument("--artifacts-dir", default=None,
+                    help="write per-run ScenarioResult JSON here")
     args = ap.parse_args()
     w = LLAMA2[args.model]
     for tname, trace in (("plateau-heavy (A)", TRACE_A),
@@ -25,9 +28,14 @@ def main():
         print(f"\ntrace {tname}: segments={trace}")
         for pol in (ElasWavePolicy(WORKER_HW), ReCyclePolicy(),
                     TorchFTPolicy()):
-            v = run_trace(w, trace, pol)
+            res = replay(w, trace, pol,
+                         name=f"spot_{tname[-2]}_{args.model}_{pol.name}")
+            v = res.summary["time_avg_rel_throughput"]
             bar = "#" * int(v * 40)
             print(f"  {pol.name:9s} {v:.3f} {bar}")
+            if args.artifacts_dir:
+                path = res.write(args.artifacts_dir)
+                print(f"            artifact: {path}")
 
 
 if __name__ == "__main__":

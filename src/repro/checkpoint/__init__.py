@@ -1,1 +1,2 @@
+"""Checkpoint manager: durable complement to the in-memory snapshot ring."""
 from .manager import CheckpointManager

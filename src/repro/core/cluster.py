@@ -347,33 +347,71 @@ class VirtualCluster:
         return self.apply_event(ev)
 
     def apply_event(self, ev: ElasticEvent) -> Dict[str, float]:
+        """Recovery Executor entry point: one elastic event -> itemized MTTR.
+
+        Multi-rank events (failure bursts) are applied as a deterministic
+        rank-ordered sequence of single-rank recoveries; detection is paid
+        once (the heartbeats are missed concurrently) and the control-plane
+        phases accumulate."""
         t_detect = 0.5  # heartbeat interval bound (modeled)
+        cells = [(r // self.pp, r % self.pp) for r in sorted(ev.ranks)]
+        if ev.kind in (EventKind.FAIL_STOP, EventKind.SCALE_IN):
+            recs = [self.recover_fail_stop(d, p,
+                                           t_detect=t_detect if i == 0 else 0.0)
+                    for i, (d, p) in enumerate(cells)]
+            return _merge_recovery_records(recs)
+        if ev.kind == EventKind.FAIL_SLOW:
+            recs = [self.recover_fail_slow(d, p, ev.slow_factor,
+                                           t_detect=t_detect if i == 0 else 0.0)
+                    for i, (d, p) in enumerate(cells)]
+            return _merge_recovery_records(recs)
+        if ev.kind == EventKind.SCALE_OUT:
+            recs = [self.recover_scale_out(d, p) for d, p in cells]
+            return _merge_recovery_records(recs)
+        if ev.kind == EventKind.DVFS_SET:
+            for d, p in cells:
+                self.freq[d, p] = ev.freq
+            return {"detect": 0.0, "plan": 0.0, "communicator": 0.0,
+                    "remap": 0.0, "migration": 0.0, "total": 0.0}
+        raise ValueError(f"unsupported elastic event kind here: {ev.kind}")
+
+    def plan_event(self, ev: ElasticEvent) -> RecoveryPlan:
+        """Mark the event's (single) rank dead and ask the ScheduleEngine for
+        a joint Dataflow/Graph/DVFS/RNG RecoveryPlan (paper §4)."""
         rank = ev.ranks[0]
         d, p = rank // self.pp, rank % self.pp
-        if ev.kind in (EventKind.FAIL_STOP, EventKind.SCALE_IN):
-            return self.recover_fail_stop(d, p, t_detect=t_detect)
-        if ev.kind == EventKind.FAIL_SLOW:
-            return self.recover_fail_slow(d, p, ev.slow_factor)
-        if ev.kind == EventKind.SCALE_OUT:
-            return self.recover_scale_out(d, p)
-        raise ValueError(f"unknown elastic event kind: {ev.kind}")
+        st = self.stages[p]
+        if d not in st.dp_ranks:
+            raise ValueError(
+                f"rank {rank} (dp={d}, stage={p}) was already removed from "
+                f"the stage's DP group; scenario traces must not re-fail a "
+                f"recovered rank")
+        self.alive[d, p] = False
+        old_sample_rank = self._current_sample_assignment()
+        widths = [int(self.alive[:, q].sum()) for q in range(self.pp)]
+        return self.engine.plan(
+            ev, dp=len(st.dp_ranks), pp=self.pp,
+            global_batch=self.global_batch, num_micro=self.num_micro,
+            layer_assignment=self.layer_assignment,
+            failed_dp_ranks=[d], old_sample_rank=old_sample_rank,
+            stage_widths=widths)
 
     def recover_fail_stop(self, d: int, p: int, t_detect: float = 0.5,
                           ) -> Dict[str, float]:
         """Full ElasWave recovery: plan + communicator edit + live remap +
         layer migration + dataflow/DVFS/RNG application."""
-        self.alive[d, p] = False
-        st = self.stages[p]
-        # --- plan (engine) ---
-        old_sample_rank = self._current_sample_assignment()
-        widths = [int(self.alive[:, q].sum()) for q in range(self.pp)]
-        plan = self.engine.plan(
-            ElasticEvent(EventKind.FAIL_STOP, self.step_count, (d * self.pp + p,)),
-            dp=len(st.dp_ranks), pp=self.pp,
-            global_batch=self.global_batch, num_micro=self.num_micro,
-            layer_assignment=self.layer_assignment,
-            failed_dp_ranks=[d], old_sample_rank=old_sample_rank,
-            stage_widths=widths)
+        ev = ElasticEvent(EventKind.FAIL_STOP, self.step_count,
+                          (d * self.pp + p,))
+        return self.apply_plan(self.plan_event(ev), t_detect=t_detect)
+
+    def apply_plan(self, plan: RecoveryPlan, t_detect: float = 0.5,
+                   ) -> Dict[str, float]:
+        """Execute a shrink RecoveryPlan (the paper's event -> plan -> apply
+        path): communicator edit, live remap, layer migration, dataflow
+        resize, DVFS top-up.  Returns the itemized MTTR record."""
+        ev = plan.event
+        rank = ev.ranks[0]
+        d, p = rank // self.pp, rank % self.pp
 
         # --- communicator: in-place edit ---
         comm_stats = self.comm.edit(remove=[d * self.pp + p])
@@ -463,7 +501,8 @@ class VirtualCluster:
                                         [st.shards[r] for r in new_ranks])
         return plan.est_seconds
 
-    def recover_fail_slow(self, d: int, p: int, factor: float) -> Dict[str, float]:
+    def recover_fail_slow(self, d: int, p: int, factor: float,
+                          t_detect: float = 0.5) -> Dict[str, float]:
         """Straggler mitigation: rebalance layers away from the slow stage +
         DVFS top-up (no state loss)."""
         self.slow[d, p] = max(self.slow[d, p], factor)
@@ -492,8 +531,8 @@ class VirtualCluster:
                      if old_stage[lid] != new_stage[lid]]
             if moves:
                 t_migr = self._apply_migrations(moves, list(plan.stage_ranges))
-        rec = {"detect": 0.5, "plan": 0.0, "communicator": 0.0,
-               "remap": 0.0, "migration": t_migr, "total": 0.5 + t_migr}
+        rec = {"detect": t_detect, "plan": 0.0, "communicator": 0.0,
+               "remap": 0.0, "migration": t_migr, "total": t_detect + t_migr}
         self.recoveries.append(rec)
         return rec
 
@@ -665,6 +704,18 @@ class VirtualCluster:
     # convenience ------------------------------------------------------
     def run(self, steps: int) -> List[float]:
         return [self.train_step() for _ in range(steps)]
+
+
+def _merge_recovery_records(recs: List[Dict[str, float]]) -> Dict[str, float]:
+    """Combine per-rank recovery records of one burst into a single record:
+    every itemized phase (and the total) accumulates; counters too."""
+    if len(recs) == 1:
+        return recs[0]
+    out: Dict[str, float] = {}
+    for rec in recs:
+        for k, v in rec.items():
+            out[k] = out.get(k, 0.0) + v
+    return out
 
 
 def _stage_of(ranges: Sequence[Tuple[int, int]], L: int) -> List[int]:

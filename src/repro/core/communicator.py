@@ -65,6 +65,14 @@ class DynamicCommunicator:
         self.history: List[OpStats] = []
 
     # ---- helpers ----
+    def clone(self) -> "DynamicCommunicator":
+        """Independent copy with the same group table and established links —
+        used by the scenario engine to price the rebuild alternatives (edit
+        vs partial vs full) against identical starting state."""
+        c = DynamicCommunicator(self.groups)
+        c.links = set(self.links)
+        return c
+
     def _group_links(self) -> Set[Link]:
         s: Set[Link] = set()
         for g in self.groups.values():

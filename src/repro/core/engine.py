@@ -3,7 +3,9 @@
 Jointly decides the four axes — Dataflow, Graph, DVFS, RNG — under per-stage
 memory-capacity checks, and attaches the data-plane actions (communicator
 edits, live-remap transfer plan, migration specs) so the Recovery Executor
-(VirtualCluster.apply_plan) can run it without further decisions.
+(``VirtualCluster.apply_plan``) can run it without further decisions.  The
+scenario engine (``repro.scenarios``) drives this plan/apply pair from
+declarative event traces; see docs/ARCHITECTURE.md for the full path.
 """
 from __future__ import annotations
 

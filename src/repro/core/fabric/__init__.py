@@ -1,2 +1,4 @@
+"""State fabric: per-step ring snapshots + live remap of ZeRO shards
+(the data plane of the paper's \u00a75 parameter-consistency mechanism)."""
 from .snapshot import SnapshotPool
 from .remap import LiveRemap, RemapPlan, IntegrityError

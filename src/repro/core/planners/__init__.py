@@ -1,3 +1,6 @@
+"""The four planning axes of the Schedule Engine (paper \u00a74): dataflow
+resizing, minimax graph repartition, DVFS top-up, RNG resharding \u2014 plus the
+MoE expert-placement extension."""
 from .dataflow import DataflowPlan, plan_dataflow
 from .graph import GraphPlan, minimax_layer_partition, brute_force_partition
 from .dvfs import DvfsPlan, plan_dvfs, bisect_min_feasible

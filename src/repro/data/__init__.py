@@ -1,1 +1,3 @@
+"""Deterministic data pipeline: content-addressed global batch sampling
+(what makes dataflow resizing loss-consistent)."""
 from .pipeline import GlobalBatchSampler, materialize_samples, make_batch

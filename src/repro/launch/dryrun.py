@@ -1,3 +1,6 @@
+"""Multi-pod dry-run driver — see ``_DOC`` below for the full usage text
+(kept separate because the XLA device-count env var must be set before any
+jax import, and the argparse help reuses it)."""
 import os
 os.environ["XLA_FLAGS"] = os.environ.get("DRYRUN_XLA_FLAGS",
                                          "--xla_force_host_platform_device_count=512")

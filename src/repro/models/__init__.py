@@ -1,2 +1,4 @@
+"""Model zoo: dense/MoE/SSM/hybrid families behind one registry so every
+elasticity mechanism is exercised across architectures."""
 from .config import ModelConfig
 from . import layers, mamba, moe, transformer, encdec, registry

@@ -1,1 +1,2 @@
+"""Optimizer kernels: ZeRO-1-shardable Adam with fp32 master weights."""
 from .adam import AdamConfig, init_opt_state, adam_update, opt_state_shapes

@@ -1,1 +1,2 @@
+"""Sharding specs and mesh lowering for the hybrid DP\u00d7PP\u00d7TP layouts."""
 from . import sharding

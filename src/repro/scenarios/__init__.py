@@ -1,0 +1,25 @@
+"""Trace-driven elastic-scenario engine (see docs/ARCHITECTURE.md).
+
+Declarative scenario specs (:mod:`.spec`), a two-mode runner (:mod:`.runner`
+— numeric VirtualCluster / analytic policy evaluation), a shared JSON metrics
+schema (:mod:`.metrics`) and a library of named scenarios (:mod:`.library`).
+
+Quick use::
+
+    from repro.scenarios import get_scenario, run_scenario
+    result = run_scenario(*get_scenario("concurrent_burst"))
+    print(result.summary)
+    result.write("artifacts/")
+"""
+from .library import SCENARIOS, get_scenario
+from .metrics import MetricsCollector, ScenarioResult
+from .runner import (AnalyticScenarioRunner, ClusterScenarioRunner,
+                     run_scenario)
+from .spec import (AnalyticWorkload, ClusterWorkload, Scenario,
+                   node_shrink_cells)
+
+__all__ = [
+    "AnalyticScenarioRunner", "AnalyticWorkload", "ClusterScenarioRunner",
+    "ClusterWorkload", "MetricsCollector", "SCENARIOS", "Scenario",
+    "ScenarioResult", "get_scenario", "node_shrink_cells", "run_scenario",
+]

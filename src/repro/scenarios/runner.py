@@ -1,0 +1,229 @@
+"""Trace-driven ScenarioRunner: one engine for every elasticity experiment.
+
+Two execution modes share the :class:`~repro.scenarios.metrics.MetricsCollector`
+artifact schema:
+
+* :class:`ClusterScenarioRunner` — drives a real
+  :class:`~repro.core.cluster.VirtualCluster` step by step.  At each step the
+  scenario's due events go through the paper's full recovery path
+  (``Agent``-shaped event -> ``ScheduleEngine.plan`` -> executor inside
+  ``VirtualCluster.apply_event``/``apply_plan``), then one real training step
+  runs.  Records: loss, simulated step time, throughput, DP width, itemized
+  MTTR per recovery — the substrate for convergence-consistency checks.
+
+* :class:`AnalyticScenarioRunner` — evaluates paper-scale workloads through a
+  recovery *policy* (ElasWave / ReCycle / TorchFT) plus the cost models,
+  without training numerics.  The runner walks the event timeline, mutates
+  the cluster view (alive / slow / freq), re-decides after every event
+  boundary, and integrates throughput over intervals, optionally charging an
+  MTTR penalty per capacity change (spot-trace replays).  It additionally
+  accounts the data-plane alternatives at every shrink/grow: communicator
+  edit vs partial vs full rebuild seconds, and — for directed MIGRATE
+  probes — blocking vs non-blocking migration stall, which is how the MTTR
+  micro-benchmarks ride the same engine.
+
+``run_scenario`` picks the mode from the workload type.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.communicator import DynamicCommunicator, build_hybrid_groups
+from repro.core.events import ElasticEvent, EventKind
+from repro.core.migration import MigrationSpec, migration_timing
+
+from .metrics import MetricsCollector, ScenarioResult
+from .spec import AnalyticWorkload, ClusterWorkload, Scenario
+
+
+class ClusterScenarioRunner:
+    """Numeric mode: scenario events against a live VirtualCluster."""
+
+    def __init__(self, scenario: Scenario, workload: ClusterWorkload):
+        self.scenario = scenario
+        self.workload = workload
+
+    def run(self) -> ScenarioResult:
+        m = MetricsCollector()
+        cl = self.workload.make_cluster()
+        gb = self.workload.global_batch
+        for step in range(self.scenario.horizon):
+            for ev in self.scenario.events_at(step):
+                rec = cl.apply_event(ev)
+                m.record_recovery(step, ev, rec)
+            loss = cl.train_step()
+            t = cl.simulate_step_time()
+            widths = [int(cl.alive[:, p].sum()) for p in range(cl.pp)]
+            m.record_step(step, loss=float(loss), step_time=float(t),
+                          throughput=gb / t, dp_width=int(min(widths)),
+                          alive=int(cl.alive.sum()))
+        losses = [s["loss"] for s in m.steps]
+        summary = {
+            "first_loss": losses[0] if losses else None,
+            "final_loss": losses[-1] if losses else None,
+            "n_recoveries": len(m.recoveries),
+            "mttr_total": sum(r["mttr"].get("total", 0.0)
+                              for r in m.recoveries),
+            "final_step_time": m.steps[-1]["step_time"] if m.steps else None,
+        }
+        res = m.result(self.scenario, "cluster", self.workload.describe(),
+                       summary)
+        res.summary["losses"] = losses    # convergence-consistency record
+        return res
+
+
+class AnalyticScenarioRunner:
+    """Policy mode: paper-scale what-if evaluation with MTTR accounting."""
+
+    def __init__(self, scenario: Scenario, workload: AnalyticWorkload,
+                 policy, *, reference_policy=None,
+                 mttr_model: Optional[Dict[str, float]] = None,
+                 zero_layout: str = "interleaved",
+                 blocking_migration: bool = False,
+                 account_communicator: bool = True):
+        self.scenario = scenario
+        self.workload = workload
+        self.policy = policy
+        self.reference_policy = reference_policy
+        self.mttr_model = mttr_model or {}
+        self.zero_layout = zero_layout
+        self.blocking_migration = blocking_migration
+        self.account_communicator = account_communicator
+
+    # -- data-plane accounting --------------------------------------------
+    def _communicator_accounting(self, comm: DynamicCommunicator,
+                                 ev: ElasticEvent) -> Dict[str, float]:
+        """Price the three recovery modes from identical pre-event state,
+        then commit the in-place edit (ElasWave's choice) to ``comm``."""
+        removed = list(ev.ranks)
+        if ev.is_grow:
+            adds = [(f"dp_stage{r % self.workload.pp}_tp0", r)
+                    for r in removed]
+            return {"edit_seconds": comm.edit(add=adds).seconds}
+        part = comm.clone().partial_rebuild(remove=removed).seconds
+        fullc = comm.clone()
+        new_groups = {k: [r for r in v if r not in set(removed)]
+                      for k, v in fullc.groups.items()}
+        full = fullc.full_rebuild(new_groups).seconds
+        edit = comm.edit(remove=removed).seconds
+        return {"edit_seconds": edit, "partial_rebuild_seconds": part,
+                "full_rebuild_seconds": full}
+
+    def _migration_accounting(self, seg, ev: ElasticEvent) -> Dict[str, float]:
+        """Stall seconds of a directed migration under this runner's layout /
+        blocking config, against one step's compute window."""
+        w = self.workload
+        L = w.cfg.num_layers
+        fl = seg.seg_fwd_flops(0, L // w.pp - 1, w.mbs) * 3
+        window = fl / (w.hw.peak_flops * w.hw.mfu) * w.num_micro
+        pbytes = int(sum(seg.param_bytes[l] for l in ev.layers))
+        obytes = int(sum(seg.opt_bytes[l] for l in ev.layers))
+        spec = MigrationSpec(tuple(ev.layers), ev.src_stage, ev.dst_stage,
+                             pbytes, obytes, dp=w.dp,
+                             zero_layout=self.zero_layout,
+                             blocking=self.blocking_migration)
+        t = migration_timing(spec, w.hw.link_bw, window)
+        return {"stall_seconds": t.stall_seconds,
+                "param_seconds": t.param_seconds,
+                "opt_seconds": t.opt_seconds,
+                "overlapped_seconds": t.overlapped_seconds,
+                "n_layers": len(ev.layers)}
+
+    # -- main loop ---------------------------------------------------------
+    def _decide(self, seg, alive, slow, freq):
+        view = self.workload.build_view(seg, alive.copy(), slow.copy())
+        view.freq = freq.copy()
+        t0 = time.perf_counter()
+        d = self.policy.decide(seg, view)
+        wall = time.perf_counter() - t0
+        thr = (self.workload.global_batch / d.step_time
+               if d.feasible and np.isfinite(d.step_time) else 0.0)
+        return d, thr, wall
+
+    def run(self) -> ScenarioResult:
+        w = self.workload
+        m = MetricsCollector()
+        seg = w.build_seg()
+        alive = np.ones((w.dp, w.pp), dtype=bool)
+        slow = np.ones((w.dp, w.pp))
+        freq = np.ones((w.dp, w.pp))
+        comm = DynamicCommunicator(build_hybrid_groups(w.dp, w.pp))
+
+        ref = self.reference_policy or self.policy
+        base = ref.decide(seg, w.build_view(seg))
+        thr0 = w.global_batch / base.step_time
+
+        boundaries = sorted({0} | set(self.scenario.event_steps))
+        total_samples = 0.0
+        decision = None
+        for i, t in enumerate(boundaries):
+            charge = 0.0
+            for ev in self.scenario.events_at(t):
+                extra: Dict = {}
+                mttr: Dict[str, float] = {}
+                if ev.kind == EventKind.MIGRATE:
+                    mig = self._migration_accounting(seg, ev)
+                    mttr = {"migration": mig["stall_seconds"],
+                            "total": mig["stall_seconds"]}
+                    extra["migration"] = mig
+                else:
+                    for r in ev.ranks:
+                        d_, p_ = r // w.pp, r % w.pp
+                        if ev.kind == EventKind.FAIL_SLOW:
+                            slow[d_, p_] = max(slow[d_, p_], ev.slow_factor)
+                        elif ev.kind == EventKind.DVFS_SET:
+                            freq[d_, p_] = ev.freq
+                        elif ev.is_grow:
+                            alive[d_, p_] = True
+                        else:
+                            alive[d_, p_] = False
+                    if self.account_communicator and (ev.is_shrink or ev.is_grow):
+                        comm_acct = self._communicator_accounting(comm, ev)
+                        extra["communicator"] = comm_acct
+                        mttr["communicator"] = comm_acct["edit_seconds"]
+                    paid = self.mttr_model.get(
+                        getattr(self.policy, "name", "")) \
+                        if t > 0 and (ev.is_shrink or ev.is_grow) else None
+                    if paid is not None:   # capacity change mid-run pays MTTR
+                        charge = paid
+                        mttr["total"] = paid
+                    else:
+                        mttr["total"] = sum(mttr.values())
+                m.record_recovery(t, ev, mttr, **extra)
+            decision, thr, wall = self._decide(seg, alive, slow, freq)
+            end = boundaries[i + 1] if i + 1 < len(boundaries) else \
+                self.scenario.horizon
+            dur = end - t
+            total_samples += thr * max(dur - charge, 0)
+            m.record_step(t, duration=dur, rel_throughput=thr / thr0,
+                          step_time=float(decision.step_time),
+                          feasible=bool(decision.feasible),
+                          policy=getattr(self.policy, "name", "?"),
+                          mttr_charged=charge,
+                          decide_wall_seconds=wall)
+        horizon = max(self.scenario.horizon, 1)
+        summary = {
+            "policy": getattr(self.policy, "name", "?"),
+            "time_avg_rel_throughput": total_samples / horizon / thr0,
+            "final_rel_throughput": m.steps[-1]["rel_throughput"]
+            if m.steps else None,
+            "final_feasible": m.steps[-1]["feasible"] if m.steps else None,
+            "n_events": len(self.scenario.events),
+        }
+        if decision is not None:
+            summary["final_decision_detail"] = {
+                k: v for k, v in decision.detail.items()
+                if isinstance(v, (int, float, bool, str))}
+        return m.result(self.scenario, "analytic", w.describe(), summary)
+
+
+def run_scenario(scenario: Scenario, workload, **kw) -> ScenarioResult:
+    """Mode is inferred from the workload type."""
+    if isinstance(workload, ClusterWorkload):
+        return ClusterScenarioRunner(scenario, workload).run()
+    if isinstance(workload, AnalyticWorkload):
+        return AnalyticScenarioRunner(scenario, workload, **kw).run()
+    raise TypeError(f"unknown workload type: {type(workload)!r}")

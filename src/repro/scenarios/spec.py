@@ -1,0 +1,237 @@
+"""Declarative elastic-scenario specs.
+
+A :class:`Scenario` is a named, ordered trace of timed
+:class:`~repro.core.events.ElasticEvent` injections over a horizon of steps
+(cluster mode) or seconds (analytic trace replay).  Scenarios compose: the
+builders below cover single failures, concurrent multi-rank bursts, cascades
+of worsening stragglers, DVFS setpoints, directed migrations, and
+SpotServe-style capacity-trace replays — the ROADMAP's "as many scenarios as
+you can imagine" expressed as data instead of bespoke event loops.
+
+Two workload descriptions exist because the runner has two execution modes
+(see :mod:`repro.scenarios.runner`):
+
+* :class:`ClusterWorkload` — a tiny real model driven numerically on the
+  :class:`~repro.core.cluster.VirtualCluster` (losses, live remap, bit-exact
+  consistency checks);
+* :class:`AnalyticWorkload` — a paper-scale workload (e.g. Llama-2 on 96
+  NPUs) evaluated through the recovery policies and cost models only.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.cost_model import HardwareSpec, SegmentCosts
+from repro.core.events import ElasticEvent, EventKind, burst
+from repro.models.config import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# workloads
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ClusterWorkload:
+    """A VirtualCluster-sized workload (tiny real model, real numerics)."""
+    family: str = "dense"
+    num_layers: int = 8
+    dropout_rate: float = 0.1
+    dp: int = 4
+    pp: int = 2
+    global_batch: int = 16
+    num_micro: int = 2
+    seq_len: int = 16
+    seed: int = 0
+    rng_mode: str = "reshard"
+
+    def make_cluster(self):
+        from repro.core.cluster import VirtualCluster
+        from repro.models import registry as R
+        cfg = R.tiny_config(self.family, num_layers=self.num_layers,
+                            dropout_rate=self.dropout_rate)
+        return VirtualCluster(cfg, dp=self.dp, pp=self.pp,
+                              global_batch=self.global_batch,
+                              num_micro=self.num_micro, seq_len=self.seq_len,
+                              seed=self.seed, rng_mode=self.rng_mode)
+
+    def rank(self, d: int, p: int) -> int:
+        return d * self.pp + p
+
+    def describe(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass(frozen=True)
+class AnalyticWorkload:
+    """A paper-scale workload evaluated through policies + cost models."""
+    cfg: ModelConfig
+    dp: int
+    pp: int
+    mbs: int
+    global_batch: int
+    seq: int
+    hw: HardwareSpec
+    mem_cap: Optional[float] = None
+
+    @property
+    def num_micro(self) -> int:
+        return self.global_batch // (self.mbs * self.dp)
+
+    def rank(self, d: int, p: int) -> int:
+        return d * self.pp + p
+
+    def build_seg(self) -> SegmentCosts:
+        return SegmentCosts.build(self.cfg, self.seq, self.hw)
+
+    def build_view(self, seg: SegmentCosts, alive: Optional[np.ndarray] = None,
+                   slow: Optional[np.ndarray] = None):
+        """A ClusterView over this workload (balanced layer assignment)."""
+        from repro.core.policies import ClusterView
+        L, pp = self.cfg.num_layers, self.pp
+        per, rem = L // pp, L % pp
+        ranges, a = [], 0
+        for p in range(pp):
+            b = a + per + (1 if p < rem else 0) - 1
+            ranges.append((a, b))
+            a = b + 1
+        return ClusterView(
+            dp=self.dp, pp=self.pp, global_batch=self.global_batch,
+            num_micro=self.num_micro, seq=self.seq, layer_assignment=ranges,
+            alive=alive if alive is not None else np.ones((self.dp, self.pp), bool),
+            freq=np.ones((self.dp, self.pp)),
+            slow=slow if slow is not None else np.ones((self.dp, self.pp)),
+            mem_cap=self.mem_cap if self.mem_cap is not None
+            else self.hw.hbm_bytes)
+
+    def describe(self) -> Dict:
+        return {"model": self.cfg.name, "dp": self.dp, "pp": self.pp,
+                "mbs": self.mbs, "global_batch": self.global_batch,
+                "seq": self.seq}
+
+
+def node_shrink_cells(n_nodes: int, dp: int, pp: int) -> List[Tuple[int, int]]:
+    """The paper's shrink pattern: one node = 2 workers, killed replica-major
+    so distinct replicas fail first.  Monotone: ``cells(n)`` is a prefix of
+    ``cells(n+1)``, which lets capacity traces move between levels by
+    failing/rejoining only the delta."""
+    cells: List[Tuple[int, int]] = []
+    d = 0
+    while len(cells) < 2 * n_nodes and d < dp:
+        for p in (0, 1):
+            if len(cells) < 2 * n_nodes:
+                cells.append((d % dp, (p + d) % pp))
+        d += 1
+    return cells
+
+
+# ---------------------------------------------------------------------------
+# scenario
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class Scenario:
+    """An ordered trace of timed elastic events over a horizon."""
+    name: str
+    events: Tuple[ElasticEvent, ...]
+    horizon: int
+    description: str = ""
+
+    def __post_init__(self):
+        # stable sort by step; ties keep insertion order (burst determinism)
+        self.events = tuple(sorted(self.events, key=lambda e: e.step))
+        if self.events and self.events[-1].step >= self.horizon:
+            raise ValueError(
+                f"event at step {self.events[-1].step} outside horizon "
+                f"{self.horizon} of scenario {self.name!r}")
+
+    def events_at(self, step: int) -> List[ElasticEvent]:
+        return [e for e in self.events if e.step == step]
+
+    @property
+    def event_steps(self) -> List[int]:
+        return sorted({e.step for e in self.events})
+
+    def describe(self) -> Dict:
+        return {"name": self.name, "horizon": self.horizon,
+                "description": self.description,
+                "events": [e.describe() for e in self.events]}
+
+    # -- builders ----------------------------------------------------------
+    @staticmethod
+    def single(name: str, kind: EventKind, step: int, ranks: Sequence[int],
+               horizon: int, **kw) -> "Scenario":
+        return Scenario(name, (ElasticEvent(kind, step, tuple(ranks), **kw),),
+                        horizon)
+
+    @staticmethod
+    def fail_stop_burst(name: str, step: int, ranks: Sequence[int],
+                        horizon: int) -> "Scenario":
+        """Concurrent multi-rank failure (e.g. a node or switch domain)."""
+        return Scenario(name, (burst(EventKind.FAIL_STOP, step, tuple(ranks)),),
+                        horizon, description="concurrent multi-rank fail-stop")
+
+    @staticmethod
+    def cascade(name: str, cells_factors: Sequence[Tuple[int, float]],
+                start: int, spacing: int, horizon: int,
+                absorb_freq: Optional[Tuple[Sequence[int], float, int]] = None,
+                ) -> "Scenario":
+        """Cascading fail-slow: (rank, factor) pairs fire ``spacing`` steps
+        apart; optionally followed by a DVFS_SET absorbing the stragglers
+        (``absorb_freq=(ranks, freq, step)``)."""
+        evs = [ElasticEvent(EventKind.FAIL_SLOW, start + i * spacing, (r,),
+                            slow_factor=f)
+               for i, (r, f) in enumerate(cells_factors)]
+        if absorb_freq is not None:
+            ranks, freq, step = absorb_freq
+            evs.append(ElasticEvent(EventKind.DVFS_SET, step, tuple(ranks),
+                                    freq=freq))
+        return Scenario(name, tuple(evs), horizon,
+                        description="cascading fail-slow with DVFS absorption")
+
+    @staticmethod
+    def shrink_regrow(name: str, rank: int, fail_step: int, rejoin_step: int,
+                      horizon: int) -> "Scenario":
+        """Scale-down then scale-up rejoin of the same worker."""
+        return Scenario(name, (
+            ElasticEvent(EventKind.SCALE_IN, fail_step, (rank,)),
+            ElasticEvent(EventKind.SCALE_OUT, rejoin_step, (rank,))),
+            horizon, description="scale-down then scale-up rejoin")
+
+    @staticmethod
+    def from_capacity_trace(name: str, trace: Sequence[Tuple[int, int]],
+                            dp: int, pp: int) -> "Scenario":
+        """Spot-instance replay: ``trace`` is (duration, nodes_down) segments.
+        Because the shrink pattern is a monotone prefix, moving between
+        capacity levels emits SCALE_IN/SCALE_OUT events for the delta cells
+        only; steps are wall-clock seconds."""
+        events: List[ElasticEvent] = []
+        t, prev = 0, 0
+        horizon = sum(d for d, _ in trace)
+        max_down = max((down for _, down in trace), default=0)
+        seq = node_shrink_cells(max_down, dp, pp)
+        for dur, down in trace:
+            if down != prev and t > 0:
+                lo, hi = 2 * min(prev, down), 2 * max(prev, down)
+                ranks = tuple(d * pp + p for d, p in seq[lo:hi])
+                kind = EventKind.SCALE_IN if down > prev else EventKind.SCALE_OUT
+                events.append(ElasticEvent(kind, t, ranks,
+                                           detail=f"capacity->{down} nodes down"))
+            elif down != prev:          # trace starts degraded
+                ranks = tuple(d * pp + p for d, p in seq[:2 * down])
+                events.append(ElasticEvent(EventKind.SCALE_IN, 0, ranks))
+            prev = down
+            t += dur
+        return Scenario(name, tuple(events), horizon,
+                        description="capacity-trace replay (seconds horizon)")
+
+    @staticmethod
+    def migration_probe(name: str, probes: Sequence[Tuple[int, ...]],
+                        src: int = 0, dst: int = 1) -> "Scenario":
+        """One MIGRATE event per probe (a tuple of layer ids), one step
+        apart — used to meter migration stall in isolation."""
+        evs = tuple(ElasticEvent(EventKind.MIGRATE, i, (), layers=tuple(ls),
+                                 src_stage=src, dst_stage=dst)
+                    for i, ls in enumerate(probes))
+        return Scenario(name, evs, len(probes) + 1,
+                        description="directed layer-migration probes")

@@ -1,0 +1,115 @@
+"""Deterministic fallback for the ``hypothesis`` API.
+
+The container image does not ship ``hypothesis`` (see requirements-dev.txt,
+which pins it for CI).  Rather than skipping every property-based module at
+collection time, this stub re-implements the tiny slice of the API the test
+suite uses — ``given``, ``settings``, and the ``integers``/``floats``/
+``lists``/``sampled_from`` strategies — drawing a fixed number of examples
+from a seed derived from the test's qualified name, so runs are reproducible
+and the properties still get exercised on real values.
+
+When ``hypothesis`` IS installed the test modules import it directly and this
+file is inert.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+from types import SimpleNamespace
+
+# examples per property when running on the stub (hypothesis defaults to 100;
+# the stub trades breadth for zero-dependency determinism)
+MAX_EXAMPLES = 5
+
+
+class Strategy:
+    """A strategy is just a draw function over a seeded ``random.Random``."""
+
+    def __init__(self, draw):
+        self.draw = draw
+
+    def map(self, f):
+        return Strategy(lambda rnd: f(self.draw(rnd)))
+
+    def filter(self, pred):
+        def draw(rnd):
+            for _ in range(1000):
+                v = self.draw(rnd)
+                if pred(v):
+                    return v
+            raise ValueError("filter predicate never satisfied")
+        return Strategy(draw)
+
+
+def integers(min_value=None, max_value=None):
+    lo = 0 if min_value is None else int(min_value)
+    hi = lo + 100 if max_value is None else int(max_value)
+    return Strategy(lambda rnd: rnd.randint(lo, hi))
+
+
+def floats(min_value=None, max_value=None, **_kw):
+    lo = 0.0 if min_value is None else float(min_value)
+    hi = lo + 1.0 if max_value is None else float(max_value)
+    return Strategy(lambda rnd: rnd.uniform(lo, hi))
+
+
+def lists(elements, min_size=0, max_size=None, **_kw):
+    mx = (min_size + 5) if max_size is None else max_size
+    return Strategy(lambda rnd: [elements.draw(rnd)
+                                 for _ in range(rnd.randint(min_size, mx))])
+
+
+def sampled_from(seq):
+    seq = list(seq)
+    return Strategy(lambda rnd: seq[rnd.randrange(len(seq))])
+
+
+def booleans():
+    return sampled_from([False, True])
+
+
+def just(value):
+    return Strategy(lambda rnd: value)
+
+
+strategies = SimpleNamespace(integers=integers, floats=floats, lists=lists,
+                             sampled_from=sampled_from, booleans=booleans,
+                             just=just)
+
+
+def settings(max_examples=None, deadline=None, **_kw):
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*arg_strats, **kw_strats):
+    """Replace the test with a loop over deterministically drawn examples.
+
+    Positional strategies fill the test's rightmost positional parameters
+    (hypothesis semantics), so ``self`` and pytest fixtures pass through.
+    """
+    def deco(fn):
+        sig = inspect.signature(fn)
+        params = list(sig.parameters.values())
+        n = len(arg_strats)
+        drawn = {p.name for p in params[len(params) - n:]} if n else set()
+        drawn |= set(kw_strats)
+        kept = [p for p in params if p.name not in drawn]
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            limit = (getattr(wrapper, "_stub_max_examples", None)
+                     or getattr(fn, "_stub_max_examples", None) or MAX_EXAMPLES)
+            rnd = random.Random(f"{fn.__module__}.{fn.__qualname__}")
+            for _ in range(min(int(limit), MAX_EXAMPLES)):
+                vals = [s.draw(rnd) for s in arg_strats]
+                kvals = {k: s.draw(rnd) for k, s in kw_strats.items()}
+                fn(*args, *vals, **kwargs, **kvals)
+
+        del wrapper.__wrapped__          # hide drawn params from pytest
+        wrapper.__signature__ = sig.replace(parameters=kept)
+        return wrapper
+    return deco

@@ -1,6 +1,9 @@
 """Dynamic communicator: in-place edits vs rebuilds."""
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:   # container lacks hypothesis -> deterministic stub
+    from _hypothesis_stub import given, settings, strategies as st
 
 from repro.core.communicator import (DynamicCommunicator, build_hybrid_groups,
                                      ring_links)

@@ -1,7 +1,10 @@
 """EP elasticity planner: LPT placement quality + reshard plan invariants."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:   # container lacks hypothesis -> deterministic stub
+    from _hypothesis_stub import given, settings, strategies as st
 
 from repro.core.planners.expert import (ExpertPlan, brute_force_placement,
                                         lpt_placement, plan_expert_reshard)

@@ -1,6 +1,9 @@
 """Interleaved-1F1B virtual-stage schedule."""
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:   # container lacks hypothesis -> deterministic stub
+    from _hypothesis_stub import given, settings, strategies as st
 
 from repro.core.pipeline import (StageTiming, simulate_1f1b,
                                  simulate_interleaved_1f1b)

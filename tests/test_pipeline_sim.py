@@ -1,7 +1,10 @@
 """1F1B pipeline simulator + cost model sanity."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:   # container lacks hypothesis -> deterministic stub
+    from _hypothesis_stub import given, settings, strategies as st
 
 from repro.core.cost_model import HardwareSpec, SegmentCosts, mini_step_time
 from repro.core.pipeline import StageTiming, simulate_1f1b, simulate_dp_pp

@@ -1,7 +1,10 @@
 """Unit + property tests for the four ElasWave planners."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:   # container lacks hypothesis -> deterministic stub
+    from _hypothesis_stub import given, settings, strategies as st
 
 from repro.core.planners.dataflow import plan_dataflow
 from repro.core.planners.graph import (brute_force_partition,

@@ -1,0 +1,207 @@
+"""Scenario engine: deterministic replay, burst ordering, degenerate traces,
+and the shapes of the new scenario library (see docs/ARCHITECTURE.md)."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.events import ElasticEvent, EventKind, burst
+from repro.core.policies import ElasWavePolicy
+from repro.scenarios import (AnalyticScenarioRunner, AnalyticWorkload,
+                             ClusterWorkload, Scenario, get_scenario,
+                             node_shrink_cells, run_scenario)
+from repro.scenarios.library import SCENARIOS
+
+
+# ---------------------------------------------------------------------------
+# spec-level (no cluster): ordering, builders, degenerate traces
+# ---------------------------------------------------------------------------
+class TestSpec:
+    def test_events_sorted_by_step_ties_keep_order(self):
+        e_late = ElasticEvent(EventKind.FAIL_STOP, 5, (1,))
+        e_a = ElasticEvent(EventKind.FAIL_SLOW, 2, (0,), slow_factor=1.2)
+        e_b = ElasticEvent(EventKind.FAIL_SLOW, 2, (3,), slow_factor=1.4)
+        scn = Scenario("s", (e_late, e_a, e_b), horizon=7)
+        assert [e.step for e in scn.events] == [2, 2, 5]
+        # insertion order preserved within the same step (burst determinism)
+        assert scn.events_at(2) == [e_a, e_b]
+
+    def test_burst_ranks_sorted(self):
+        ev = burst(EventKind.FAIL_STOP, 1, (7, 2, 5))
+        assert ev.ranks == (2, 5, 7)
+
+    def test_event_outside_horizon_rejected(self):
+        with pytest.raises(ValueError):
+            Scenario("bad", (ElasticEvent(EventKind.FAIL_STOP, 4, (0,)),),
+                     horizon=4)
+
+    def test_unknown_scenario_name(self):
+        with pytest.raises(KeyError):
+            get_scenario("no_such_scenario")
+
+    def test_capacity_trace_emits_delta_events(self):
+        trace = [(100, 0), (50, 1), (50, 2), (50, 0)]
+        scn = Scenario.from_capacity_trace("cap", trace, dp=4, pp=3)
+        assert [e.step for e in scn.events] == [100, 150, 200]
+        kinds = [e.kind for e in scn.events]
+        assert kinds == [EventKind.SCALE_IN, EventKind.SCALE_IN,
+                         EventKind.SCALE_OUT]
+        seq = node_shrink_cells(2, 4, 3)
+        # first shrink = first node's cells; second = the delta only
+        assert scn.events[0].ranks == tuple(d * 3 + p for d, p in seq[:2])
+        assert scn.events[1].ranks == tuple(d * 3 + p for d, p in seq[2:4])
+        # final regrow rejoins everything that went down
+        assert set(scn.events[2].ranks) == {d * 3 + p for d, p in seq[:4]}
+        assert scn.horizon == 250
+
+    def test_shrink_cells_monotone_prefix(self):
+        full = node_shrink_cells(3, 8, 3)
+        for n in (1, 2):
+            assert node_shrink_cells(n, 8, 3) == full[:2 * n]
+
+
+# ---------------------------------------------------------------------------
+# cluster mode: determinism, bursts, empty traces
+# ---------------------------------------------------------------------------
+W = ClusterWorkload(dp=4, pp=2, global_batch=16, num_micro=2)
+
+
+def small_failstop():
+    return Scenario.single("det", EventKind.FAIL_STOP, step=2,
+                           ranks=(W.rank(1, 1),), horizon=4)
+
+
+class TestClusterRunner:
+    def test_deterministic_replay(self):
+        """Same trace -> identical step records; recovery records identical
+        except the measured planner wall time ('plan', folded into 'total'),
+        which is the one intentionally non-replayable MTTR component."""
+        r1 = run_scenario(small_failstop(), W)
+        r2 = run_scenario(small_failstop(), W)
+        assert r1.steps == r2.steps
+        assert r1.summary["losses"] == r2.summary["losses"]
+        assert len(r1.recoveries) == len(r2.recoveries)
+        for a, b in zip(r1.recoveries, r2.recoveries):
+            ka = {k: v for k, v in a["mttr"].items()
+                  if k not in ("plan", "total")}
+            kb = {k: v for k, v in b["mttr"].items()
+                  if k not in ("plan", "total")}
+            assert ka == kb
+            assert {k: v for k, v in a.items() if k != "mttr"} == \
+                {k: v for k, v in b.items() if k != "mttr"}
+
+    def test_empty_trace_matches_fault_free(self):
+        scn = Scenario("empty", (), horizon=3)
+        res = run_scenario(scn, W)
+        assert res.recoveries == [] and len(res.steps) == 3
+        base = W.make_cluster().run(3)
+        np.testing.assert_allclose(res.summary["losses"], base, rtol=0, atol=0)
+
+    def test_zero_horizon(self):
+        res = run_scenario(Scenario("null", (), horizon=0), W)
+        assert res.steps == [] and res.summary["final_loss"] is None
+
+    def test_burst_is_single_record_with_one_detect(self):
+        scn, w = get_scenario("concurrent_burst")
+        res = run_scenario(scn, w)
+        assert len(res.recoveries) == 1
+        rec = res.recoveries[0]
+        assert rec["ranks"] == sorted(rec["ranks"])
+        # detection paid once for the concurrent pair
+        assert rec["mttr"]["detect"] == pytest.approx(0.5)
+        assert rec["mttr"]["total"] > rec["mttr"]["detect"]
+        # both stages lost one replica
+        assert res.steps[-1]["dp_width"] == w.dp - 1
+
+    def test_artifact_roundtrip(self, tmp_path):
+        res = run_scenario(small_failstop(), W)
+        path = res.write(tmp_path)
+        data = json.loads(path.read_text())
+        assert data["mode"] == "cluster"
+        assert len(data["steps"]) == 4 and len(data["recoveries"]) == 1
+        assert data["recoveries"][0]["mttr"]["total"] > 0
+
+
+class TestLibraryShapes:
+    def test_shrink_regrow_restores_width(self):
+        scn, w = get_scenario("shrink_regrow")
+        res = run_scenario(scn, w)
+        widths = [s["dp_width"] for s in res.steps]
+        assert widths[0] == w.dp and min(widths) == w.dp - 1 \
+            and widths[-1] == w.dp
+        # rejoin recovery has no detect/plan/migration, only comm + remap
+        rejoin = res.recoveries[-1]
+        assert rejoin["kind"] == "scale_out"
+        assert rejoin["mttr"]["detect"] == 0.0
+        assert rejoin["mttr"]["migration"] == 0.0
+        assert rejoin["mttr"]["communicator"] > 0.0
+
+    def test_cascading_failslow_dvfs_absorbs(self):
+        scn, w = get_scenario("cascading_failslow")
+        res = run_scenario(scn, w)
+        t = [s["step_time"] for s in res.steps]
+        # final (post-DVFS) step time is below the degraded peak
+        assert t[-1] < max(t)
+        kinds = [r["kind"] for r in res.recoveries]
+        assert kinds == ["fail_slow", "fail_slow", "dvfs_set"]
+
+    def test_every_library_entry_is_well_formed(self):
+        for name in SCENARIOS:
+            scn, w = get_scenario(name)
+            assert scn.name == name and scn.horizon > 0
+            assert all(e.step < scn.horizon for e in scn.events)
+            assert isinstance(w, ClusterWorkload)
+
+
+# ---------------------------------------------------------------------------
+# analytic mode
+# ---------------------------------------------------------------------------
+def tiny_analytic():
+    from repro.core.cost_model import HardwareSpec
+    from repro.models.config import ModelConfig
+    cfg = ModelConfig(name="tiny-analytic", family="dense", num_layers=12,
+                      d_model=512, num_heads=8, num_kv_heads=8,
+                      d_ff=2048, vocab_size=4096)
+    hw = HardwareSpec()
+    return AnalyticWorkload(cfg=cfg, dp=4, pp=3, mbs=2, global_batch=64,
+                            seq=128, hw=hw)
+
+
+class TestAnalyticRunner:
+    def test_shrink_reduces_throughput_and_prices_comm(self):
+        wl = tiny_analytic()
+        scn = Scenario.single("a", EventKind.SCALE_IN, step=0,
+                              ranks=(wl.rank(0, 0),), horizon=1)
+        res = AnalyticScenarioRunner(scn, wl, ElasWavePolicy(wl.hw)).run()
+        assert res.mode == "analytic"
+        rec = res.steps[-1]
+        assert rec["feasible"] and 0 < rec["rel_throughput"] < 1
+        acct = res.recoveries[0]["communicator"]
+        assert acct["edit_seconds"] < acct["partial_rebuild_seconds"] \
+            < acct["full_rebuild_seconds"]
+
+    def test_deterministic_modulo_wall_time(self):
+        wl = tiny_analytic()
+
+        def go():
+            scn = Scenario.single("a", EventKind.SCALE_IN, step=0,
+                                  ranks=(wl.rank(0, 0),), horizon=1)
+            res = AnalyticScenarioRunner(scn, wl, ElasWavePolicy(wl.hw)).run()
+            for s in res.steps:
+                s.pop("decide_wall_seconds")
+            return res
+
+        assert go().to_json() == go().to_json()
+
+    def test_mttr_model_charged_per_capacity_change(self):
+        wl = tiny_analytic()
+        trace = [(100, 0), (100, 1), (100, 0)]
+        scn = Scenario.from_capacity_trace("cap", trace, wl.dp, wl.pp)
+        pol = ElasWavePolicy(wl.hw)
+        free = AnalyticScenarioRunner(scn, wl, pol).run()
+        paid = AnalyticScenarioRunner(scn, wl, pol,
+                                      mttr_model={"elaswave": 10.0}).run()
+        assert paid.summary["time_avg_rel_throughput"] < \
+            free.summary["time_avg_rel_throughput"]
+        assert sum(s["mttr_charged"] for s in paid.steps) == \
+            pytest.approx(20.0)
