@@ -10,7 +10,7 @@ def main() -> None:
     from . import (communicator_mttr, convergence_consistency, failslow,
                    lse_breakdown, migration_mttr, moe_case, roofline,
                    scenarios_suite, snapshot_overhead, spot_trace,
-                   throughput_failstop)
+                   throughput_failstop, train_step_perf)
     print("name,us_per_call,derived")
     mods = [
         ("fig11", throughput_failstop),
@@ -24,6 +24,7 @@ def main() -> None:
         ("sec7.7", moe_case),
         ("roofline", roofline),
         ("scenarios", scenarios_suite),
+        ("bench_step", train_step_perf),
     ]
     failed = []
     for name, mod in mods:

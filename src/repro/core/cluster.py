@@ -5,7 +5,10 @@ paper mechanism operates on REAL state with REAL numerics:
 
 * per-layer parameters owned by pipeline stages (migratable pytrees);
 * ZeRO-1 optimizer shards per (stage, dp-rank) under contiguous or
-  interleaved layouts (core/zero.py);
+  interleaved layouts (core/zero.py), stored on the flat-state backbone
+  (core/statespace.py): one contiguous fp32 buffer per component per stage,
+  with memoized interval tables replacing per-call ``owner_intervals``
+  rebuilds;
 * per-step ring snapshots to host memory (core/fabric/snapshot.py);
 * live remap on shrink (core/fabric/remap.py) — actual array movement,
   integrity-checked;
@@ -20,12 +23,21 @@ slice (the logically-centralized equivalent of the pipeline's math), so the
 elastic run's loss trajectory can be compared bit-for-bit-ish against a
 fault-free run.  The distribution layer (who owns what, what moves on which
 event, what it costs) is exactly the paper's; see DESIGN.md §3.
+
+Two step/recovery implementations share this state:
+
+* the **fast path** (default) — one jitted, ``vmap``-batched call over the
+  step's micro-batches with a single ``device_get``, one fused host-side
+  Adam update per stage, indexed-scatter parameter write-back, and batched
+  recovery that only rebuilds the stages an event actually touches;
+* the **seed path** (``fast_path=False``, ``core/legacy.py``) — the original
+  per-item / per-shard / per-entry loops, kept as the numerics oracle and
+  benchmark baseline.  ``tests/test_fast_path_numerics.py`` asserts the two
+  produce bit-identical loss trajectories and shard contents through
+  fail-stop + scale-out events.
 """
 from __future__ import annotations
 
-import dataclasses
-import time as _time
-from functools import partial
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -33,12 +45,12 @@ import jax.numpy as jnp
 import numpy as np
 from jax.flatten_util import ravel_pytree
 
-from repro.data.pipeline import GlobalBatchSampler, make_batch
+from repro.data.pipeline import GlobalBatchSampler, materialize_samples
 from repro.models import registry as R
 from repro.models.config import ModelConfig
 from repro.models.layers import RngCtx
-from repro.optim.adam import AdamConfig, adam_update_flat
-from . import zero
+from repro.optim.adam import AdamConfig, adam_update_flat_np
+from . import legacy
 from .agent import Agent, Probe
 from .communicator import DynamicCommunicator, build_hybrid_groups
 from .cost_model import HardwareSpec, SegmentCosts
@@ -48,28 +60,20 @@ from .fabric.remap import LiveRemap, RemapPlan
 from .fabric.snapshot import SnapshotPool
 from .migration import MigrationSpec, migration_timing
 from .pipeline import StageTiming, simulate_1f1b
+from .statespace import (COMPONENTS, HEAD, STEM, EntryFlattener, StageState,
+                         get_table)
 
 
-STEM = -1      # pseudo layer ids for stage state-space entries
-HEAD = -2
-
-
-@dataclasses.dataclass
-class StageState:
-    """Optimizer state of one pipeline stage, ZeRO-1 sharded over its DP group."""
-    entries: List[int]                       # [STEM?] + layer ids + [HEAD?]
-    sizes: List[int]                         # element count per entry
-    layout_kind: str
-    dp_ranks: List[int]                      # surviving dp indices of this group
-    # shards[dp_rank] = {"master": flat fp32 over owned intervals, "mu", "nu"}
-    shards: Dict[int, Dict[str, np.ndarray]]
-
-    def layout(self) -> zero.Layout:
-        return zero.Layout(self.layout_kind, tuple(self.sizes), len(self.dp_ranks))
-
-    @property
-    def total(self) -> int:
-        return sum(self.sizes)
+def _recovery_record(*, detect: float = 0.0, plan: float = 0.0,
+                     communicator: float = 0.0, remap: float = 0.0,
+                     migration: float = 0.0, rng_moves: int = 0,
+                     ) -> Dict[str, float]:
+    """One schema for every recovery record, regardless of event kind, so
+    ``_merge_recovery_records`` output shape never depends on the event."""
+    return {"detect": detect, "plan": plan, "communicator": communicator,
+            "remap": remap, "migration": migration,
+            "total": detect + plan + communicator + remap + migration,
+            "rng_moves": rng_moves}
 
 
 class VirtualCluster:
@@ -81,7 +85,8 @@ class VirtualCluster:
                  hw: Optional[HardwareSpec] = None,
                  mem_cap: Optional[float] = None,
                  snapshot_enabled: bool = True,
-                 non_blocking_migration: bool = True):
+                 non_blocking_migration: bool = True,
+                 fast_path: bool = True):
         assert global_batch % num_micro == 0
         assert (global_batch // num_micro) % dp == 0, "initial even split"
         self.cfg = cfg
@@ -93,6 +98,7 @@ class VirtualCluster:
         self.zero_layout = zero_layout
         self.snapshot_enabled = snapshot_enabled
         self.non_blocking_migration = non_blocking_migration
+        self.fast_path = fast_path
         self.sampler = GlobalBatchSampler(global_batch, seed)
         self.base_key = jax.random.key(seed)
 
@@ -104,7 +110,9 @@ class VirtualCluster:
         self.layer_params: List[Any] = [R.init_layer(ks[1 + i], cfg, i)
                                         for i in range(L)]
         self.head = R.init_head(ks[L + 1], cfg)
-        self._unravel = {}
+        self.flattener = EntryFlattener()
+        self.flattener.build_model_unraveler(self.stem, self.layer_params,
+                                             self.head)
         # balanced initial layer assignment
         per = L // pp
         rem = L % pp
@@ -126,9 +134,9 @@ class VirtualCluster:
         for p in range(pp):
             st = self._build_stage_state(p, list(range(dp)))
             self.stages.append(st)
-            pool = SnapshotPool(dp, self.adam)
+            pool = SnapshotPool(dp, self.adam, batched=fast_path)
             if snapshot_enabled:
-                pool.bootstrap(0, [st.shards[r] for r in st.dp_ranks])
+                pool.bootstrap(0, [st.shard(r) for r in st.dp_ranks])
             self.snapshots.append(pool)
 
         # ---- control plane ----
@@ -146,19 +154,17 @@ class VirtualCluster:
         self.recoveries: List[Dict[str, float]] = []
         self.seg = SegmentCosts.build(cfg, seq_len, self.hw)
         self._grad_fn_cache: Dict[int, Any] = {}
+        self._scan_grad_cache: Dict[Tuple[int, int], Any] = {}
 
     # ------------------------------------------------------------------
     # state-space helpers
     # ------------------------------------------------------------------
-    def _entry_vec(self, entry: int) -> np.ndarray:
+    def _entry_tree(self, entry: int):
         if entry == STEM:
-            v, unr = ravel_pytree(self.stem)
-        elif entry == HEAD:
-            v, unr = ravel_pytree(self.head)
-        else:
-            v, unr = ravel_pytree(self.layer_params[entry])
-        self._unravel[entry] = unr
-        return np.asarray(v, dtype=np.float32)
+            return self.stem
+        if entry == HEAD:
+            return self.head
+        return self.layer_params[entry]
 
     def _stage_entries(self, p: int) -> List[int]:
         a, b = self.layer_assignment[p]
@@ -171,46 +177,34 @@ class VirtualCluster:
 
     def _build_stage_state(self, p: int, dp_ranks: List[int]) -> StageState:
         entries = self._stage_entries(p)
-        vecs = [self._entry_vec(e) for e in entries]
+        vecs = [self.flattener.flatten_entry(e, self._entry_tree(e))
+                for e in entries]
         sizes = [v.size for v in vecs]
         full = np.concatenate(vecs) if vecs else np.zeros(0, np.float32)
-        st = StageState(entries, sizes, self.zero_layout, list(dp_ranks), {})
-        lay = st.layout()
-        for j, r in enumerate(st.dp_ranks):
-            ivs = lay.owner_intervals(j)
-            master = np.concatenate([full[s:e] for s, e in ivs]) if ivs else \
-                np.zeros(0, np.float32)
-            st.shards[r] = {"master": master,
-                            "mu": np.zeros_like(master),
-                            "nu": np.zeros_like(master)}
-        return st
+        return StageState.from_full(
+            entries, sizes, self.zero_layout, dp_ranks,
+            {"master": full, "mu": np.zeros_like(full),
+             "nu": np.zeros_like(full)})
 
     def _stage_full_vec(self, st: StageState, comp: str = "master") -> np.ndarray:
         """All-gather equivalent: reassemble the stage's full state vector."""
-        full = np.zeros(st.total, dtype=np.float32)
-        lay = st.layout()
-        for j, r in enumerate(st.dp_ranks):
-            off = 0
-            for s, e in lay.owner_intervals(j):
-                n = e - s
-                full[s:e] = st.shards[r][comp][off:off + n]
-                off += n
-        return full
+        if self.fast_path:
+            return st.full(comp)
+        return legacy.stage_full_vec(st, comp)
 
     def _write_params_from_masters(self):
-        for p, st in enumerate(self.stages):
-            full = self._stage_full_vec(st)
-            off = 0
-            for e, sz in zip(st.entries, st.sizes):
-                vec = jnp.asarray(full[off:off + sz])
-                tree = self._unravel[e](vec)
-                if e == STEM:
-                    self.stem = tree
-                elif e == HEAD:
-                    self.head = tree
-                else:
-                    self.layer_params[e] = tree
-                off += sz
+        if not self.fast_path:
+            return legacy.write_params_from_masters(self)
+        # indexed scatter (one fancy-index per stage, straight into the
+        # model-flat buffer) + ONE jitted model unravel (a single
+        # host->device transfer for the whole model)
+        vec = np.empty(sum(st.total for st in self.stages), dtype=np.float32)
+        off = 0
+        for st in self.stages:
+            st.table.scatter(st.flat["master"], out=vec[off:off + st.total])
+            off += st.total
+        self.stem, self.layer_params, self.head = \
+            self.flattener.unflatten_model(vec)
 
     # ------------------------------------------------------------------
     # training math
@@ -236,64 +230,116 @@ class VirtualCluster:
                 jax.value_and_grad(self._loss_fn, argnums=(0, 1, 2)))
         return self._grad_fn_cache[batch_size]
 
-    def _micro_grads(self, step: int) -> Tuple[float, Any]:
+    def _batched_grad_fn(self, batch_size: int, n_items: int):
+        """One jitted call over ``n_items`` stacked micro-batches of
+        ``batch_size``: per-item loss + flat gradient, no host sync inside
+        the step.  ``vmap`` batches the independent per-item grads (measured
+        bit-identical to the per-item jit calls across model families — a
+        ``lax.scan`` over items is too, but ~1.5x slower on CPU)."""
+        key = (batch_size, n_items)
+        fn = self._scan_grad_cache.get(key)
+        if fn is None:
+            grad_one = jax.value_and_grad(self._loss_fn, argnums=(0, 1, 2))
+
+            def batched(stem, layers, head, toks, labs, base_key, step, sids):
+                # fold_in inside the jit: integer PRNG ops, bit-identical to
+                # the eager fold, and one less host dispatch per step
+                step_key = jax.random.fold_in(base_key, step)
+
+                def one(tok, lab, sid):
+                    loss, grads = grad_one(stem, layers, head, tok, lab,
+                                           step_key, sid)
+                    return loss, ravel_pytree(grads)[0]
+                return jax.vmap(one)(toks, labs, sids)
+
+            fn = jax.jit(batched)
+            self._scan_grad_cache[key] = fn
+        return fn
+
+    def _micro_grads(self, step: int) -> Tuple[float, np.ndarray]:
         """Weighted accumulation over micro-batches and DP slices — the
-        numerics of dataflow-resized hybrid-parallel training."""
+        numerics of dataflow-resized hybrid-parallel training.
+
+        Fast path: micro-batches are bucketed by size (uneven after a
+        failure), each bucket runs as ONE jitted vmap-batched call, and one
+        ``device_get`` per bucket (one per step in the common even-split
+        case) fetches all losses + flat per-item gradients, which then
+        accumulate host-side in the seed's exact (micro, rank) order.
+        Returns ``(total_loss, model-flat gradient)``.
+        """
         ids_by_rank = self.sampler.partition(step, self.per_rank_mbs,
                                              self.num_micro)
-        step_key = jax.random.fold_in(self.base_key, step)
-        total_loss = 0.0
-        acc = None
+        items: List[Tuple[int, np.ndarray]] = []    # (rank, ids), seed order
         for m in range(self.num_micro):
             for r, rank_ids in enumerate(ids_by_rank):
                 ids = rank_ids[m]
-                if len(ids) == 0:
-                    continue
-                batch = make_batch(ids, self.seq, self.cfg.vocab_size)
-                if self.rng_mode == "reshard":
-                    sids = batch["sample_ids"]
-                else:   # naive: rank-addressed streams (the paper's "w/o")
-                    sids = jnp.arange(len(ids)) + r * 100003
-                loss, grads = self._grad_fn(len(ids))(
-                    self.stem, self.layer_params, self.head,
-                    batch["tokens"], batch["labels"], step_key, sids)
-                w = self.grad_weights[r] / self.num_micro
-                total_loss += float(loss) * w
-                gs = jax.tree.map(lambda g: g * w, grads)
-                acc = gs if acc is None else jax.tree.map(jnp.add, acc, gs)
+                if len(ids):
+                    items.append((r, ids))
+        n = len(items)
+        buckets: Dict[int, List[int]] = {}
+        for k, (r, ids) in enumerate(items):
+            buckets.setdefault(len(ids), []).append(k)
+        loss_rows: List[Any] = [None] * n
+        flat_rows: List[Any] = [None] * n
+        for B, idxs in buckets.items():
+            # one hash-materialization for the whole bucket (elementwise in
+            # (sample_id, position), so reshape == per-item materialize)
+            ids_cat = np.concatenate([items[k][1] for k in idxs])
+            toks = materialize_samples(ids_cat, self.seq,
+                                       self.cfg.vocab_size
+                                       ).reshape(len(idxs), B, self.seq)
+            if self.rng_mode == "reshard":
+                sids = ids_cat.astype(np.int32).reshape(len(idxs), B)
+            else:   # naive: rank-addressed streams (the paper's "w/o")
+                sids = np.stack([np.arange(B, dtype=np.int32)
+                                 + np.int32(items[k][0] * 100003)
+                                 for k in idxs])
+            jt = jnp.asarray(toks)
+            # one device_get per bucket (exactly one per step in the even-
+            # split common case) for all losses + flat grads together
+            losses, flats = jax.device_get(self._batched_grad_fn(B, len(idxs))(
+                self.stem, self.layer_params, self.head, jt, jt,
+                self.base_key, np.uint32(step), jnp.asarray(sids)))
+            for i, k in enumerate(idxs):
+                loss_rows[k] = losses[i]
+                flat_rows[k] = flats[i]
+        # host-side weighted accumulation in the seed's (micro, rank) order;
+        # numpy f32 elementwise ops are bit-identical to the seed's eager
+        # per-leaf jnp ops (IEEE correctly-rounded either way)
+        acc = None
+        total_loss = 0.0
+        for k, (r, _ids) in enumerate(items):
+            w = self.grad_weights[r] / self.num_micro
+            gw = flat_rows[k] * np.float32(w)
+            acc = gw if acc is None else acc + gw
+            total_loss += float(loss_rows[k]) * w
         return total_loss, acc
 
     def train_step(self) -> float:
+        if not self.fast_path:
+            return legacy.train_step(self)
         step = self.step_count
-        loss, (g_stem, g_layers, g_head) = self._micro_grads(step)
+        loss, gflat = self._micro_grads(step)
         self.opt_step += 1
         grad_shard_by_stage: List[List[np.ndarray]] = []
-        for p, st in enumerate(self.stages):
-            # assemble this stage's full gradient vector
-            parts = []
-            for e in st.entries:
-                if e == STEM:
-                    parts.append(np.asarray(ravel_pytree(g_stem)[0], np.float32))
-                elif e == HEAD:
-                    parts.append(np.asarray(ravel_pytree(g_head)[0], np.float32))
-                else:
-                    parts.append(np.asarray(ravel_pytree(g_layers[e])[0], np.float32))
-            gfull = np.concatenate(parts) if parts else np.zeros(0, np.float32)
-            lay = st.layout()
-            shards = []
-            for j, r in enumerate(st.dp_ranks):
-                gs = np.concatenate([gfull[s:e] for s, e in lay.owner_intervals(j)]) \
-                    if st.total else np.zeros(0, np.float32)
-                newm, newst = adam_update_flat(
-                    jnp.asarray(gs),
-                    {k: jnp.asarray(v) for k, v in st.shards[r].items()},
-                    self.opt_step, self.adam)
-                st.shards[r] = {k: np.asarray(v) for k, v in newst.items()}
-                shards.append(gs)
-            grad_shard_by_stage.append(shards)
+        off = 0
+        for st in self.stages:
+            # this stage's slice of the model-flat gradient, permuted to
+            # shard order with one fancy-index
+            gstage = gflat[off:off + st.total]
+            off += st.total
+            tbl = st.table
+            gshard = tbl.gather(gstage)
+            grad_shard_by_stage.append(tbl.split(gshard))
+            if st.total:
+                # ONE fused host-side Adam update over the stage's flat
+                # buffers (bit-identical to the seed's per-shard eager
+                # updates); the per-rank shards are views into the result
+                st.flat = adam_update_flat_np(gshard, st.flat, self.opt_step,
+                                              self.adam)
         self._write_params_from_masters()
         if self.snapshot_enabled:
-            for p, st in enumerate(self.stages):
+            for p in range(self.pp):
                 self.snapshots[p].snapshot_step(step, grad_shard_by_stage[p],
                                                 self.opt_step)
         self.step_count += 1
@@ -371,8 +417,7 @@ class VirtualCluster:
         if ev.kind == EventKind.DVFS_SET:
             for d, p in cells:
                 self.freq[d, p] = ev.freq
-            return {"detect": 0.0, "plan": 0.0, "communicator": 0.0,
-                    "remap": 0.0, "migration": 0.0, "total": 0.0}
+            return _recovery_record()
         raise ValueError(f"unsupported elastic event kind here: {ev.kind}")
 
     def plan_event(self, ev: ElasticEvent) -> RecoveryPlan:
@@ -435,13 +480,11 @@ class VirtualCluster:
                     if self.alive[dd, dv.rank]:
                         self.freq[dd, dv.rank] = max(self.freq[dd, dv.rank], dv.freq)
 
-        rec = {"detect": t_detect, "plan": plan.plan_seconds,
-               "communicator": comm_stats.seconds, "remap": t_remap,
-               "migration": t_migr,
-               "total": t_detect + plan.plan_seconds + comm_stats.seconds
-               + t_remap + t_migr}
-        rec["rng_moves"] = len(plan.rng.layer_stream_moves) + \
-            len(plan.rng.sample_stream_moves)
+        rec = _recovery_record(
+            detect=t_detect, plan=plan.plan_seconds,
+            communicator=comm_stats.seconds, remap=t_remap, migration=t_migr,
+            rng_moves=len(plan.rng.layer_stream_moves)
+            + len(plan.rng.sample_stream_moves))
         self.recoveries.append(rec)
         return rec
 
@@ -456,49 +499,45 @@ class VirtualCluster:
                                          if g == f"dp_stage{p}_tp0"])
         t_remap = self._widen_stage(p, joining=[d])
         self._apply_dataflow()
-        rec = {"detect": 0.0, "plan": 0.0, "communicator": comm_stats.seconds,
-               "remap": t_remap, "migration": 0.0,
-               "total": comm_stats.seconds + t_remap}
+        rec = _recovery_record(communicator=comm_stats.seconds, remap=t_remap)
         self.recoveries.append(rec)
         return rec
 
     def _widen_stage(self, p: int, joining: List[int]) -> float:
         """Reverse remap: redistribute the stage state over a WIDER group.
         Sources: current owners' device shards; targets: new layout."""
+        if not self.fast_path:
+            return legacy.widen_stage(self, p, joining)
         st = self.stages[p]
         old_ranks = list(st.dp_ranks)
-        old_lay = st.layout()
+        tbl = st.table
         new_ranks = old_ranks + [j for j in joining if j not in old_ranks]
-        pre = {c: self._stage_full_vec(st, c) for c in ("master", "mu", "nu")}
-        device_parts = {r: old_lay.owner_intervals(old_ranks.index(r))
+        pre = {c: st.full(c) for c in COMPONENTS}
+        device_parts = {r: tbl.owner_intervals(old_ranks.index(r))
                         for r in old_ranks}
-        new_lay = zero.Layout(st.layout_kind, tuple(st.sizes), len(new_ranks))
-        target_parts = {r: new_lay.owner_intervals(j)
+        new_tbl = get_table(st.layout_kind, st.sizes, len(new_ranks))
+        target_parts = {r: new_tbl.owner_intervals(j)
                         for j, r in enumerate(new_ranks)}
         plan = self.remapper.compute_plan(st.total, device_parts, {},
                                           target_parts)
+        shards = st.shards      # views, built once for all components
+        empty = np.zeros(0, np.float32)
         new_shards: Dict[int, Dict[str, np.ndarray]] = {r: {} for r in new_ranks}
-        for comp in ("master", "mu", "nu"):
-            device_data = {}
-            for r in old_ranks:
-                ivs = old_lay.owner_intervals(old_ranks.index(r))
-                segs, off = {}, 0
-                for s, e in ivs:
-                    segs[(s, e)] = st.shards[r][comp][off:off + (e - s)]
-                    off += e - s
-                device_data[r] = segs
+        for comp in COMPONENTS:
+            device_data = {r: tbl.segments(old_ranks.index(r), shards[r][comp])
+                           for r in old_ranks}
             assembled = self.remapper.execute(plan, st.total, device_data, {})
             for r in new_ranks:
-                new_shards[r][comp] = assembled.get(r, np.zeros(0, np.float32))
-        st.dp_ranks = new_ranks
-        st.shards = new_shards
-        for comp in ("master", "mu", "nu"):
-            post = self._stage_full_vec(st, comp)
-            assert np.array_equal(post, pre[comp]), f"widen corrupted {comp}"
-        self.snapshots[p] = SnapshotPool(len(new_ranks), self.adam)
+                new_shards[r][comp] = assembled.get(r, empty)
+        st.replace_shards(new_ranks, new_shards)
+        for comp in COMPONENTS:
+            assert np.array_equal(st.full(comp), pre[comp]), \
+                f"widen corrupted {comp}"
+        self.snapshots[p] = SnapshotPool(len(new_ranks), self.adam,
+                                         batched=True)
         if self.snapshot_enabled:
             self.snapshots[p].bootstrap(self.step_count,
-                                        [st.shards[r] for r in new_ranks])
+                                        [st.shard(r) for r in new_ranks])
         return plan.est_seconds
 
     def recover_fail_slow(self, d: int, p: int, factor: float,
@@ -531,8 +570,7 @@ class VirtualCluster:
                      if old_stage[lid] != new_stage[lid]]
             if moves:
                 t_migr = self._apply_migrations(moves, list(plan.stage_ranges))
-        rec = {"detect": t_detect, "plan": 0.0, "communicator": 0.0,
-               "remap": 0.0, "migration": t_migr, "total": t_detect + t_migr}
+        rec = _recovery_record(detect=t_detect, migration=t_migr)
         self.recoveries.append(rec)
         return rec
 
@@ -558,100 +596,100 @@ class VirtualCluster:
 
     def _live_remap_stage(self, p: int, failed: List[int],
                           ) -> Tuple[float, RemapPlan]:
+        if not self.fast_path:
+            return legacy.live_remap_stage(self, p, failed)
         st = self.stages[p]
         pool = self.snapshots[p]
-        old_lay = st.layout()
+        tbl = st.table
         old_ranks = list(st.dp_ranks)
         # record pre-failure full vectors for verification
         pre = {c: self._stage_full_vec_with_snapshots(p, c, failed)
-               for c in ("master", "mu", "nu")}
+               for c in COMPONENTS}
 
         surviving = [r for r in old_ranks if r not in failed]
-        device_parts = {r: old_lay.owner_intervals(old_ranks.index(r))
+        device_parts = {r: tbl.owner_intervals(old_ranks.index(r))
                         for r in surviving}
         host_parts = {}
         for f in failed:
             holder = pool.holder_of(old_ranks.index(f))
             holder_rank = old_ranks[holder]
             if holder_rank in surviving and pool.host[holder] is not None:
-                host_parts[f] = old_lay.owner_intervals(old_ranks.index(f))
-        new_lay = zero.Layout(st.layout_kind, tuple(st.sizes), len(surviving))
-        target_parts = {r: new_lay.owner_intervals(j)
+                host_parts[f] = tbl.owner_intervals(old_ranks.index(f))
+        new_tbl = get_table(st.layout_kind, st.sizes, len(surviving))
+        target_parts = {r: new_tbl.owner_intervals(j)
                         for j, r in enumerate(surviving)}
 
         plan = self.remapper.compute_plan(st.total, device_parts, host_parts,
                                           target_parts)
-        # execute with real arrays, per component
+        # execute with real arrays, per component; per-rank segment dicts are
+        # zero-copy views of the flat buffers
+        shards = st.shards
+        empty = np.zeros(0, np.float32)
         new_shards: Dict[int, Dict[str, np.ndarray]] = {r: {} for r in surviving}
-        for comp in ("master", "mu", "nu"):
-            device_data = {}
-            for r in surviving:
-                ivs = old_lay.owner_intervals(old_ranks.index(r))
-                segs, off = {}, 0
-                for s, e in ivs:
-                    segs[(s, e)] = st.shards[r][comp][off:off + (e - s)]
-                    off += e - s
-                device_data[r] = segs
+        for comp in COMPONENTS:
+            device_data = {r: tbl.segments(old_ranks.index(r), shards[r][comp])
+                           for r in surviving}
             host_data = {}
             for f in failed:
                 holder = pool.holder_of(old_ranks.index(f))
                 snap = pool.host[holder]
                 if snap is None:
                     continue
-                ivs = old_lay.owner_intervals(old_ranks.index(f))
-                segs, off = {}, 0
-                for s, e in ivs:
-                    segs[(s, e)] = snap[comp][off:off + (e - s)]
-                    off += e - s
-                host_data[f] = segs
+                host_data[f] = tbl.segments(old_ranks.index(f), snap[comp])
             assembled = self.remapper.execute(plan, st.total, device_data,
                                               host_data)
             for r in surviving:
-                new_shards[r][comp] = assembled.get(r, np.zeros(0, np.float32))
-        st.dp_ranks = surviving
-        st.shards = new_shards
+                new_shards[r][comp] = assembled.get(r, empty)
+        st.replace_shards(surviving, new_shards)
         # verification (paper: online verification before resume)
-        for comp in ("master", "mu", "nu"):
-            post = self._stage_full_vec(st, comp)
-            assert np.array_equal(post, pre[comp]), f"remap corrupted {comp}"
+        for comp in COMPONENTS:
+            assert np.array_equal(st.full(comp), pre[comp]), \
+                f"remap corrupted {comp}"
         # rebuild ring snapshot pool for the shrunken group
-        self.snapshots[p] = SnapshotPool(len(surviving), self.adam)
+        self.snapshots[p] = SnapshotPool(len(surviving), self.adam,
+                                         batched=True)
         if self.snapshot_enabled:
             self.snapshots[p].bootstrap(self.step_count,
-                                        [st.shards[r] for r in surviving])
+                                        [st.shard(r) for r in surviving])
         return plan.est_seconds, plan
 
     def _stage_full_vec_with_snapshots(self, p: int, comp: str,
                                        failed: List[int]) -> np.ndarray:
         """Pre-failure ground truth: survivors' device state + failed ranks'
         snapshot state."""
+        if not self.fast_path:
+            return legacy.stage_full_vec_with_snapshots(self, p, comp, failed)
         st = self.stages[p]
         pool = self.snapshots[p]
+        tbl = st.table
         full = np.zeros(st.total, dtype=np.float32)
-        lay = st.layout()
         for j, r in enumerate(st.dp_ranks):
-            src = st.shards[r][comp] if r not in failed else None
-            if src is None:
+            if r not in failed:
+                src = tbl.shard_view(st.flat[comp], j)
+            else:
                 snap = pool.host[pool.holder_of(j)]
-                src = snap[comp] if snap is not None else None
-            if src is None:
-                continue
-            off = 0
-            for s, e in lay.owner_intervals(j):
-                full[s:e] = src[off:off + (e - s)]
-                off += e - s
+                if snap is None:
+                    continue
+                src = snap[comp]
+            tbl.scatter_shard(j, src, full)
         return full
 
     def _apply_migrations(self, moves: List[Tuple[int, int, int]],
                           new_ranges: List[Tuple[int, int]]) -> float:
         """Move layers between stages: optimizer-state slices (per layout) +
-        parameter ownership.  Returns modeled stall seconds (MTTR)."""
+        parameter ownership.  Returns modeled stall seconds (MTTR).
+
+        Fast path: only the stages whose entry list actually changes are
+        rebuilt (a slice-move between two stages leaves the others' flat
+        buffers and snapshot pools untouched); entry slices come from one
+        gather per component per affected stage."""
+        if not self.fast_path:
+            return legacy.apply_migrations(self, moves, new_ranges)
         total_stall = 0.0
         # compute per-move timing with the migration model
         step_window = self.simulate_step_time()
         for (lid, src, dst) in moves:
             st_src = self.stages[src]
-            pos = st_src.entries.index(lid)
             pbytes = int(self.seg.param_bytes[lid])
             obytes = int(self.seg.opt_bytes[lid])
             spec = MigrationSpec((lid,), src, dst, pbytes, obytes,
@@ -660,45 +698,47 @@ class VirtualCluster:
                                  blocking=not self.non_blocking_migration)
             timing = migration_timing(spec, self.hw.link_bw, step_window)
             total_stall += timing.stall_seconds
-        # state movement: rebuild both stage states from the new assignment
-        # (real arrays; correctness asserted by reconstructing masters)
-        pre_masters = {e: self._entry_from_stage(e) for st in self.stages
-                       for e in st.entries}
+        old_entries = {p: list(self.stages[p].entries) for p in range(self.pp)}
         self.layer_assignment = list(new_ranges)
-        for p in range(self.pp):
-            st_old = self.stages[p]
-            survivors = list(st_old.dp_ranks)
-            entries = self._stage_entries(p)
-            vec_parts = [pre_masters[e] for e in entries]
-            sizes = [v["master"].size for v in vec_parts]
-            new_st = StageState(entries, sizes, self.zero_layout, survivors, {})
-            lay = new_st.layout()
-            for comp in ("master", "mu", "nu"):
-                full = np.concatenate([v[comp] for v in vec_parts]) if vec_parts \
-                    else np.zeros(0, np.float32)
-                for j, r in enumerate(survivors):
-                    shard = np.concatenate([full[s:e]
-                                            for s, e in lay.owner_intervals(j)]) \
-                        if new_st.total else np.zeros(0, np.float32)
-                    new_st.shards.setdefault(r, {})[comp] = shard
+        new_entries = {p: self._stage_entries(p) for p in range(self.pp)}
+        affected = [p for p in range(self.pp)
+                    if old_entries[p] != new_entries[p]]
+        # batch-slice the moving/retained entry state out of affected stages
+        entry_state: Dict[int, Dict[str, np.ndarray]] = {}
+        for p in affected:
+            st = self.stages[p]
+            tbl = st.table
+            for comp in COMPONENTS:
+                fullc = st.full(comp)
+                for pos, e in enumerate(st.entries):
+                    s_, e_ = tbl.layer_interval(pos)
+                    entry_state.setdefault(e, {})[comp] = fullc[s_:e_]
+        for p in affected:
+            survivors = list(self.stages[p].dp_ranks)
+            entries = new_entries[p]
+            sizes = [entry_state[e]["master"].size for e in entries]
+            full_by_comp = {
+                c: (np.concatenate([entry_state[e][c] for e in entries])
+                    if entries else np.zeros(0, np.float32))
+                for c in COMPONENTS}
+            new_st = StageState.from_full(entries, sizes, self.zero_layout,
+                                          survivors, full_by_comp)
             self.stages[p] = new_st
-            self.snapshots[p] = SnapshotPool(len(survivors), self.adam)
+            self.snapshots[p] = SnapshotPool(len(survivors), self.adam,
+                                             batched=True)
             if self.snapshot_enabled:
-                self.snapshots[p].bootstrap(self.step_count,
-                                            [new_st.shards[r] for r in survivors])
+                self.snapshots[p].bootstrap(
+                    self.step_count, [new_st.shard(r) for r in survivors])
         return total_stall
 
     def _entry_from_stage(self, e: int) -> Dict[str, np.ndarray]:
+        if not self.fast_path:
+            return legacy.entry_from_stage(self, e)
         for st in self.stages:
             if e in st.entries:
                 pos = st.entries.index(e)
-                iv = st.layout().layer_interval(pos) if st.layout_kind == "interleaved" \
-                    else (sum(st.sizes[:pos]), sum(st.sizes[:pos + 1]))
-                out = {}
-                for comp in ("master", "mu", "nu"):
-                    full = self._stage_full_vec(st, comp)
-                    out[comp] = full[iv[0]:iv[1]]
-                return out
+                s_, e_ = st.table.layer_interval(pos)
+                return {c: st.full(c)[s_:e_] for c in COMPONENTS}
         raise KeyError(e)
 
     # convenience ------------------------------------------------------

@@ -157,14 +157,19 @@ class LiveRemap:
         for mv in plan.moves:
             store = device_data if mv.channel in ("local", "d2d") else host_data
             src_map = store[mv.src]
-            # find the owning interval containing mv.interval
-            seg = None
-            for iv, arr in src_map.items():
-                if iv[0] <= mv.interval[0] and mv.interval[1] <= iv[1]:
-                    seg = (iv, arr)
-                    break
-            assert seg is not None, (mv, list(src_map))
-            iv, arr = seg
+            # find the owning interval containing mv.interval: exact match
+            # first (the common whole-interval move), linear scan otherwise
+            arr = src_map.get(mv.interval)
+            if arr is not None:
+                iv = mv.interval
+            else:
+                seg = None
+                for iv, arr in src_map.items():
+                    if iv[0] <= mv.interval[0] and mv.interval[1] <= iv[1]:
+                        seg = (iv, arr)
+                        break
+                assert seg is not None, (mv, list(src_map))
+                iv, arr = seg
             lo = mv.interval[0] - iv[0]
             hi = mv.interval[1] - iv[0]
             out.setdefault(mv.dst, {})[mv.interval] = np.array(arr[lo:hi])

@@ -1,0 +1,322 @@
+"""Seed-faithful reference implementations of the VirtualCluster hot paths.
+
+These are the *old* (pre flat-state fast path) step and recovery
+implementations, preserved verbatim modulo the StageState storage change
+(per-rank shards are now zero-copy views into per-stage flat buffers, and
+interval lookups go through the memoized ``statespace`` tables).  The Python
+per-item / per-rank / per-interval loop *structure* of the seed — one jitted
+grad call and one host sync per micro-batch, one eager Adam per ZeRO shard,
+one re-unravel per entry, full-stage rebuilds on migration — is exactly what
+the fast path in ``cluster.py`` optimizes away, so it is what this module
+preserves.
+
+Two consumers:
+
+* the numerics oracle — ``tests/test_fast_path_numerics.py`` asserts the fast
+  path's loss trajectory and post-recovery shard contents are bit-identical
+  to this path;
+* the benchmark baseline — ``benchmarks/train_step_perf.py`` times this path
+  against the fast path and emits ``BENCH_train_step.json``.
+
+Selected with ``VirtualCluster(..., fast_path=False)``.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.flatten_util import ravel_pytree
+
+from repro.data.pipeline import make_batch
+from repro.optim.adam import adam_update_flat
+
+from .fabric.snapshot import SnapshotPool
+from .migration import MigrationSpec, migration_timing
+from .statespace import COMPONENTS, HEAD, STEM, StageState, get_table
+
+
+# ------------------------------------------------------------------ step --
+def micro_grads(cl, step: int) -> Tuple[float, tuple]:
+    """Seed micro-batch loop: one jitted grad call and one ``float(loss)``
+    host sync per (micro, rank) slice; per-leaf eager accumulation."""
+    ids_by_rank = cl.sampler.partition(step, cl.per_rank_mbs, cl.num_micro)
+    step_key = jax.random.fold_in(cl.base_key, step)
+    total_loss = 0.0
+    acc = None
+    for m in range(cl.num_micro):
+        for r, rank_ids in enumerate(ids_by_rank):
+            ids = rank_ids[m]
+            if len(ids) == 0:
+                continue
+            batch = make_batch(ids, cl.seq, cl.cfg.vocab_size)
+            if cl.rng_mode == "reshard":
+                sids = batch["sample_ids"]
+            else:   # naive: rank-addressed streams (the paper's "w/o")
+                sids = jnp.arange(len(ids)) + r * 100003
+            loss, grads = cl._grad_fn(len(ids))(
+                cl.stem, cl.layer_params, cl.head,
+                batch["tokens"], batch["labels"], step_key, sids)
+            w = cl.grad_weights[r] / cl.num_micro
+            total_loss += float(loss) * w
+            gs = jax.tree.map(lambda g: g * w, grads)
+            acc = gs if acc is None else jax.tree.map(jnp.add, acc, gs)
+    return total_loss, acc
+
+
+def train_step(cl) -> float:
+    """Seed train step: per-entry gradient re-ravel, per-(stage, rank) eager
+    Adam over interval-concatenated shards, per-entry parameter re-unravel."""
+    step = cl.step_count
+    loss, (g_stem, g_layers, g_head) = micro_grads(cl, step)
+    cl.opt_step += 1
+    grad_shard_by_stage: List[List[np.ndarray]] = []
+    for p, st in enumerate(cl.stages):
+        # assemble this stage's full gradient vector
+        parts = []
+        for e in st.entries:
+            if e == STEM:
+                parts.append(np.asarray(ravel_pytree(g_stem)[0], np.float32))
+            elif e == HEAD:
+                parts.append(np.asarray(ravel_pytree(g_head)[0], np.float32))
+            else:
+                parts.append(np.asarray(ravel_pytree(g_layers[e])[0], np.float32))
+        gfull = np.concatenate(parts) if parts else np.zeros(0, np.float32)
+        tbl = st.table
+        shards = []
+        for j, r in enumerate(st.dp_ranks):
+            gs = np.concatenate([gfull[s:e] for s, e in tbl.owner_intervals(j)]) \
+                if st.total else np.zeros(0, np.float32)
+            _, newst = adam_update_flat(
+                jnp.asarray(gs),
+                {k: jnp.asarray(v) for k, v in st.shard(r).items()},
+                cl.opt_step, cl.adam)
+            st.write_shard(r, {k: np.asarray(v) for k, v in newst.items()})
+            shards.append(gs)
+        grad_shard_by_stage.append(shards)
+    write_params_from_masters(cl)
+    if cl.snapshot_enabled:
+        for p, st in enumerate(cl.stages):
+            cl.snapshots[p].snapshot_step(step, grad_shard_by_stage[p],
+                                          cl.opt_step)
+    cl.step_count += 1
+    cl.losses.append(loss)
+    return loss
+
+
+def stage_full_vec(st: StageState, comp: str = "master") -> np.ndarray:
+    """Seed all-gather equivalent: per-rank, per-interval Python copy loop."""
+    full = np.zeros(st.total, dtype=np.float32)
+    tbl = st.table
+    shards = st.shards
+    for j, r in enumerate(st.dp_ranks):
+        off = 0
+        src = shards[r][comp]
+        for s, e in tbl.owner_intervals(j):
+            n = e - s
+            full[s:e] = src[off:off + n]
+            off += n
+    return full
+
+
+def write_params_from_masters(cl) -> None:
+    """Seed write-back: one re-unravel and one host->device transfer per
+    entry."""
+    for p, st in enumerate(cl.stages):
+        full = stage_full_vec(st)
+        off = 0
+        for e, sz in zip(st.entries, st.sizes):
+            vec = jnp.asarray(full[off:off + sz])
+            tree = cl.flattener.unflatten_entry(e, vec)
+            if e == STEM:
+                cl.stem = tree
+            elif e == HEAD:
+                cl.head = tree
+            else:
+                cl.layer_params[e] = tree
+            off += sz
+
+
+# -------------------------------------------------------------- recovery --
+def stage_full_vec_with_snapshots(cl, p: int, comp: str,
+                                  failed: List[int]) -> np.ndarray:
+    """Pre-failure ground truth: survivors' device state + failed ranks'
+    snapshot state (seed per-interval loop)."""
+    st = cl.stages[p]
+    pool = cl.snapshots[p]
+    full = np.zeros(st.total, dtype=np.float32)
+    tbl = st.table
+    shards = st.shards
+    for j, r in enumerate(st.dp_ranks):
+        src = shards[r][comp] if r not in failed else None
+        if src is None:
+            snap = pool.host[pool.holder_of(j)]
+            src = snap[comp] if snap is not None else None
+        if src is None:
+            continue
+        off = 0
+        for s, e in tbl.owner_intervals(j):
+            full[s:e] = src[off:off + (e - s)]
+            off += e - s
+    return full
+
+
+def live_remap_stage(cl, p: int, failed: List[int]):
+    """Seed shrink remap: per-component, per-rank segment dicts rebuilt in
+    Python; full-vector verification via the seed gather loop."""
+    st = cl.stages[p]
+    pool = cl.snapshots[p]
+    tbl = st.table
+    old_ranks = list(st.dp_ranks)
+    # record pre-failure full vectors for verification
+    pre = {c: stage_full_vec_with_snapshots(cl, p, c, failed)
+           for c in COMPONENTS}
+
+    surviving = [r for r in old_ranks if r not in failed]
+    device_parts = {r: tbl.owner_intervals(old_ranks.index(r))
+                    for r in surviving}
+    host_parts = {}
+    for f in failed:
+        holder = pool.holder_of(old_ranks.index(f))
+        holder_rank = old_ranks[holder]
+        if holder_rank in surviving and pool.host[holder] is not None:
+            host_parts[f] = tbl.owner_intervals(old_ranks.index(f))
+    new_tbl = get_table(st.layout_kind, st.sizes, len(surviving))
+    target_parts = {r: new_tbl.owner_intervals(j)
+                    for j, r in enumerate(surviving)}
+
+    plan = cl.remapper.compute_plan(st.total, device_parts, host_parts,
+                                    target_parts)
+    # execute with real arrays, per component
+    shards = st.shards
+    new_shards: Dict[int, Dict[str, np.ndarray]] = {r: {} for r in surviving}
+    for comp in COMPONENTS:
+        device_data = {}
+        for r in surviving:
+            ivs = tbl.owner_intervals(old_ranks.index(r))
+            segs, off = {}, 0
+            for s, e in ivs:
+                segs[(s, e)] = shards[r][comp][off:off + (e - s)]
+                off += e - s
+            device_data[r] = segs
+        host_data = {}
+        for f in failed:
+            holder = pool.holder_of(old_ranks.index(f))
+            snap = pool.host[holder]
+            if snap is None:
+                continue
+            ivs = tbl.owner_intervals(old_ranks.index(f))
+            segs, off = {}, 0
+            for s, e in ivs:
+                segs[(s, e)] = snap[comp][off:off + (e - s)]
+                off += e - s
+            host_data[f] = segs
+        assembled = cl.remapper.execute(plan, st.total, device_data, host_data)
+        for r in surviving:
+            new_shards[r][comp] = assembled.get(r, np.zeros(0, np.float32))
+    st.replace_shards(surviving, new_shards)
+    # verification (paper: online verification before resume)
+    for comp in COMPONENTS:
+        post = stage_full_vec(st, comp)
+        assert np.array_equal(post, pre[comp]), f"remap corrupted {comp}"
+    # rebuild ring snapshot pool for the shrunken group
+    cl.snapshots[p] = SnapshotPool(len(surviving), cl.adam, batched=False)
+    if cl.snapshot_enabled:
+        cl.snapshots[p].bootstrap(cl.step_count,
+                                  [st.shard(r) for r in surviving])
+    return plan.est_seconds, plan
+
+
+def widen_stage(cl, p: int, joining: List[int]) -> float:
+    """Seed reverse remap: redistribute the stage state over a WIDER group."""
+    st = cl.stages[p]
+    old_ranks = list(st.dp_ranks)
+    tbl = st.table
+    new_ranks = old_ranks + [j for j in joining if j not in old_ranks]
+    pre = {c: stage_full_vec(st, c) for c in COMPONENTS}
+    device_parts = {r: tbl.owner_intervals(old_ranks.index(r))
+                    for r in old_ranks}
+    new_tbl = get_table(st.layout_kind, st.sizes, len(new_ranks))
+    target_parts = {r: new_tbl.owner_intervals(j)
+                    for j, r in enumerate(new_ranks)}
+    plan = cl.remapper.compute_plan(st.total, device_parts, {}, target_parts)
+    shards = st.shards
+    new_shards: Dict[int, Dict[str, np.ndarray]] = {r: {} for r in new_ranks}
+    for comp in COMPONENTS:
+        device_data = {}
+        for r in old_ranks:
+            ivs = tbl.owner_intervals(old_ranks.index(r))
+            segs, off = {}, 0
+            for s, e in ivs:
+                segs[(s, e)] = shards[r][comp][off:off + (e - s)]
+                off += e - s
+            device_data[r] = segs
+        assembled = cl.remapper.execute(plan, st.total, device_data, {})
+        for r in new_ranks:
+            new_shards[r][comp] = assembled.get(r, np.zeros(0, np.float32))
+    st.replace_shards(new_ranks, new_shards)
+    for comp in COMPONENTS:
+        post = stage_full_vec(st, comp)
+        assert np.array_equal(post, pre[comp]), f"widen corrupted {comp}"
+    cl.snapshots[p] = SnapshotPool(len(new_ranks), cl.adam, batched=False)
+    if cl.snapshot_enabled:
+        cl.snapshots[p].bootstrap(cl.step_count,
+                                  [st.shard(r) for r in new_ranks])
+    return plan.est_seconds
+
+
+def entry_from_stage(cl, e: int) -> Dict[str, np.ndarray]:
+    """Seed entry extraction: three full-stage gathers per entry."""
+    for st in cl.stages:
+        if e in st.entries:
+            pos = st.entries.index(e)
+            iv = st.table.layer_interval(pos)
+            out = {}
+            for comp in COMPONENTS:
+                full = stage_full_vec(st, comp)
+                out[comp] = full[iv[0]:iv[1]]
+            return out
+    raise KeyError(e)
+
+
+def apply_migrations(cl, moves: List[Tuple[int, int, int]],
+                     new_ranges: List[Tuple[int, int]]) -> float:
+    """Seed migration executor: rebuilds EVERY stage's state (and snapshot
+    pool) from per-entry slices, affected or not."""
+    total_stall = 0.0
+    # compute per-move timing with the migration model
+    step_window = cl.simulate_step_time()
+    for (lid, src, dst) in moves:
+        st_src = cl.stages[src]
+        pbytes = int(cl.seg.param_bytes[lid])
+        obytes = int(cl.seg.opt_bytes[lid])
+        spec = MigrationSpec((lid,), src, dst, pbytes, obytes,
+                             dp=len(st_src.dp_ranks),
+                             zero_layout=cl.zero_layout,
+                             blocking=not cl.non_blocking_migration)
+        timing = migration_timing(spec, cl.hw.link_bw, step_window)
+        total_stall += timing.stall_seconds
+    # state movement: rebuild both stage states from the new assignment
+    # (real arrays; correctness asserted by reconstructing masters)
+    pre_state = {e: entry_from_stage(cl, e) for st in cl.stages
+                 for e in st.entries}
+    cl.layer_assignment = list(new_ranges)
+    for p in range(cl.pp):
+        st_old = cl.stages[p]
+        survivors = list(st_old.dp_ranks)
+        entries = cl._stage_entries(p)
+        vec_parts = [pre_state[e] for e in entries]
+        sizes = [v["master"].size for v in vec_parts]
+        full_by_comp = {
+            c: (np.concatenate([v[c] for v in vec_parts]) if vec_parts
+                else np.zeros(0, np.float32))
+            for c in COMPONENTS}
+        new_st = StageState.from_full(entries, sizes, cl.zero_layout,
+                                      survivors, full_by_comp)
+        cl.stages[p] = new_st
+        cl.snapshots[p] = SnapshotPool(len(survivors), cl.adam, batched=False)
+        if cl.snapshot_enabled:
+            cl.snapshots[p].bootstrap(cl.step_count,
+                                      [new_st.shard(r) for r in survivors])
+    return total_stall

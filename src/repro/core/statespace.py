@@ -1,0 +1,301 @@
+"""Flat-state backbone: vectorized ZeRO interval tables + per-stage buffers.
+
+The VirtualCluster's hot paths (train step, live remap, widening, layer
+migration, ring snapshots) all operate on the same state space: per pipeline
+stage, the concatenation of its entries' flattened fp32 optimizer vectors,
+partitioned over the stage's DP group by a ``core.zero.Layout``.  The seed
+implementation re-derived that partition in Python (``owner_intervals`` lists,
+per-interval ``np.concatenate`` loops) at every call site on every step.
+
+This module makes the state space a first-class, precomputed object:
+
+* :class:`IntervalTable` — the vectorized, **memoized** equivalent of
+  ``zero.Layout``: per-rank ``(starts, ends)`` numpy offset arrays, per-rank
+  shard sizes/offsets, and a ``shard_index`` permutation that maps the
+  *shard-order* flat buffer (rank 0's owned bytes, then rank 1's, ...) to
+  stage-space offsets.  ``gather``/``scatter`` are each a single fancy-index
+  instead of a Python interval loop.  Tables are keyed by
+  ``(kind, layer_sizes, dp)`` via :func:`get_table`, so no per-step or
+  per-recovery call site ever rebuilds interval lists.
+* :class:`StageState` — one contiguous fp32 buffer per optimizer component
+  (``master``/``mu``/``nu``) per stage, stored in shard order so every rank's
+  ZeRO shard is a zero-copy **view**; an entry-offset index locates each
+  layer's slice.
+* :class:`EntryFlattener` — cached ``ravel_pytree`` unravelers per entry and
+  for the whole model, so parameter write-back is one indexed scatter + one
+  unravel instead of a per-entry re-unravel loop.
+
+``zero.Layout`` remains the reference implementation; equivalence is enforced
+by ``tests/test_statespace.py`` across dp × layer-size grids (including the
+last-rank remainder case).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+Interval = Tuple[int, int]
+
+COMPONENTS = ("master", "mu", "nu")
+
+STEM = -1      # pseudo entry ids for stage state spaces
+HEAD = -2
+
+
+class IntervalTable:
+    """Precomputed ownership tables for one ``(kind, layer_sizes, dp)``.
+
+    Semantics match ``zero.Layout`` exactly, including empty intervals and the
+    last-rank remainder.  Use :func:`get_table` to obtain memoized instances.
+    """
+
+    __slots__ = ("kind", "layer_sizes", "dp", "total", "entry_offsets",
+                 "starts", "ends", "shard_sizes", "shard_offsets",
+                 "_shard_index", "_runs", "_rank_runs", "_intervals")
+
+    def __init__(self, kind: str, layer_sizes: Tuple[int, ...], dp: int):
+        assert kind in ("contiguous", "interleaved"), kind
+        self.kind = kind
+        self.layer_sizes = tuple(int(s) for s in layer_sizes)
+        self.dp = int(dp)
+        sizes = np.asarray(self.layer_sizes, dtype=np.int64)
+        self.total = int(sizes.sum())
+        self.entry_offsets = np.concatenate(
+            [np.zeros(1, np.int64), np.cumsum(sizes)])
+        if kind == "contiguous":
+            per = self.total // self.dp
+            starts = (np.arange(self.dp, dtype=np.int64) * per)[:, None]
+            ends = starts + per
+            ends[self.dp - 1, 0] = self.total
+        else:
+            per = sizes // self.dp
+            starts = (self.entry_offsets[:-1][None, :]
+                      + np.arange(self.dp, dtype=np.int64)[:, None] * per[None, :])
+            ends = starts + per[None, :]
+            if len(self.layer_sizes):
+                ends[self.dp - 1, :] = self.entry_offsets[1:]
+        self.starts, self.ends = starts, ends
+        lens = ends - starts
+        self.shard_sizes = lens.sum(axis=1)
+        self.shard_offsets = np.concatenate(
+            [np.zeros(1, np.int64), np.cumsum(self.shard_sizes)])
+        # contiguous-run copy lists (built once): gather/scatter walk a few
+        # precomputed (stage_start, stage_end, shard_off) slices instead of
+        # per-element fancy indexing — faster for realistic interval counts
+        runs: List[Tuple[int, int, int]] = []
+        rank_runs: List[List[Tuple[int, int, int]]] = []
+        off = 0
+        for j in range(self.dp):
+            mine: List[Tuple[int, int, int]] = []
+            local = 0
+            for s, e in zip(starts[j], ends[j]):
+                s, e = int(s), int(e)
+                if e > s:
+                    runs.append((s, e, off + local))
+                    mine.append((s, e, local))
+                    local += e - s
+            rank_runs.append(mine)
+            off += local
+        self._runs = runs
+        self._rank_runs = rank_runs
+        self._shard_index: Optional[np.ndarray] = None
+        self._intervals: List[Optional[List[Interval]]] = [None] * self.dp
+
+    @property
+    def shard_index(self) -> np.ndarray:
+        """Shard-order -> stage-space permutation (lazy: O(total) int64, only
+        materialized for callers that want elementwise indexing)."""
+        if self._shard_index is None:
+            pieces = [np.arange(s, e, dtype=np.int64)
+                      for s, e, _o in self._runs]
+            idx = np.concatenate(pieces) if pieces else np.zeros(0, np.int64)
+            assert idx.size == self.total
+            self._shard_index = idx
+        return self._shard_index
+
+    # -- Layout-compatible API -------------------------------------------
+    def owner_intervals(self, rank: int) -> List[Interval]:
+        """Intervals of the stage state space owned by ``rank`` (cached)."""
+        cached = self._intervals[rank]
+        if cached is None:
+            cached = [(int(s), int(e)) for s, e in
+                      zip(self.starts[rank], self.ends[rank])]
+            self._intervals[rank] = cached
+        return list(cached)
+
+    def layer_interval(self, layer_pos: int) -> Interval:
+        return (int(self.entry_offsets[layer_pos]),
+                int(self.entry_offsets[layer_pos + 1]))
+
+    # -- flat-buffer algebra ---------------------------------------------
+    def gather(self, full: np.ndarray) -> np.ndarray:
+        """Stage-space vector -> shard-order flat buffer (precomputed
+        contiguous-run slice copies)."""
+        out = np.empty(self.total, dtype=full.dtype)
+        for s, e, o in self._runs:
+            out[o:o + (e - s)] = full[s:e]
+        return out
+
+    def scatter(self, flat: np.ndarray,
+                out: Optional[np.ndarray] = None) -> np.ndarray:
+        """Shard-order flat buffer -> stage-space vector (precomputed
+        contiguous-run slice copies)."""
+        if out is None:
+            out = np.empty(self.total, dtype=flat.dtype)
+        for s, e, o in self._runs:
+            out[s:e] = flat[o:o + (e - s)]
+        return out
+
+    def scatter_shard(self, j: int, shard: np.ndarray,
+                      out: np.ndarray) -> np.ndarray:
+        """Write rank ``j``'s 1-D shard into the stage-space vector ``out``."""
+        for s, e, o in self._rank_runs[j]:
+            out[s:e] = shard[o:o + (e - s)]
+        return out
+
+    def shard_slice(self, j: int) -> slice:
+        return slice(int(self.shard_offsets[j]), int(self.shard_offsets[j + 1]))
+
+    def shard_view(self, flat: np.ndarray, j: int) -> np.ndarray:
+        """Rank ``j``'s shard as a zero-copy view of the flat buffer."""
+        return flat[self.shard_slice(j)]
+
+    def split(self, flat: np.ndarray) -> List[np.ndarray]:
+        """All ranks' shards as views, in rank order."""
+        return [self.shard_view(flat, j) for j in range(self.dp)]
+
+    def segments(self, j: int, shard: np.ndarray) -> Dict[Interval, np.ndarray]:
+        """Split rank ``j``'s 1-D shard into ``{interval: view}`` — the input
+        format of ``fabric.remap.LiveRemap.execute``."""
+        segs: Dict[Interval, np.ndarray] = {}
+        off = 0
+        for s, e in self.owner_intervals(j):
+            segs[(s, e)] = shard[off:off + (e - s)]
+            off += e - s
+        return segs
+
+
+_TABLE_CACHE: Dict[Tuple[str, Tuple[int, ...], int], IntervalTable] = {}
+
+
+def get_table(kind: str, layer_sizes: Sequence[int], dp: int) -> IntervalTable:
+    """Memoized IntervalTable lookup — the hot-path replacement for
+    constructing ``zero.Layout`` and calling ``owner_intervals`` per rank."""
+    key = (kind, tuple(int(s) for s in layer_sizes), int(dp))
+    tbl = _TABLE_CACHE.get(key)
+    if tbl is None:
+        tbl = IntervalTable(*key)
+        _TABLE_CACHE[key] = tbl
+    return tbl
+
+
+@dataclasses.dataclass
+class StageState:
+    """Optimizer state of one pipeline stage, ZeRO-1 sharded over its DP group.
+
+    ``flat[comp]`` is ONE contiguous fp32 buffer in **shard order** (rank 0's
+    owned bytes, then rank 1's, ...); each rank's shard is a zero-copy view.
+    Stage-space (entry-concatenation-order) vectors are produced on demand via
+    the memoized :class:`IntervalTable` permutation.
+    """
+    entries: List[int]                      # [STEM?] + layer ids + [HEAD?]
+    sizes: List[int]                        # element count per entry
+    layout_kind: str
+    dp_ranks: List[int]                     # surviving dp indices of this group
+    flat: Dict[str, np.ndarray]             # comp -> shard-order buffer
+
+    # -- construction -----------------------------------------------------
+    @classmethod
+    def from_full(cls, entries: List[int], sizes: List[int], kind: str,
+                  dp_ranks: List[int],
+                  full_by_comp: Dict[str, np.ndarray]) -> "StageState":
+        tbl = get_table(kind, sizes, len(dp_ranks))
+        flat = {c: np.ascontiguousarray(tbl.gather(
+                    np.asarray(full_by_comp[c], dtype=np.float32)))
+                for c in COMPONENTS}
+        return cls(list(entries), list(sizes), kind, list(dp_ranks), flat)
+
+    # -- derived views ----------------------------------------------------
+    @property
+    def table(self) -> IntervalTable:
+        return get_table(self.layout_kind, self.sizes, len(self.dp_ranks))
+
+    @property
+    def total(self) -> int:
+        return sum(self.sizes)
+
+    @property
+    def shards(self) -> Dict[int, Dict[str, np.ndarray]]:
+        """``{dp_rank: {comp: shard-view}}`` — zero-copy; mutate via
+        ``view[:] = ...`` or :meth:`write_shard`, never by dict assignment."""
+        tbl = self.table
+        return {r: {c: tbl.shard_view(self.flat[c], j) for c in COMPONENTS}
+                for j, r in enumerate(self.dp_ranks)}
+
+    def shard(self, r: int) -> Dict[str, np.ndarray]:
+        j = self.dp_ranks.index(r)
+        tbl = self.table
+        return {c: tbl.shard_view(self.flat[c], j) for c in COMPONENTS}
+
+    def write_shard(self, r: int, state: Dict[str, Any]) -> None:
+        j = self.dp_ranks.index(r)
+        tbl = self.table
+        for c in COMPONENTS:
+            tbl.shard_view(self.flat[c], j)[...] = np.asarray(
+                state[c], dtype=np.float32)
+
+    def full(self, comp: str = "master") -> np.ndarray:
+        """All-gather equivalent: the stage's full state-space vector."""
+        return self.table.scatter(self.flat[comp])
+
+    def replace_shards(self, new_ranks: List[int],
+                       shards_by_rank: Dict[int, Dict[str, np.ndarray]]) -> None:
+        """Adopt a new DP group whose per-rank shard arrays are given in
+        shard order (e.g. the output of ``LiveRemap.execute``)."""
+        empty = np.zeros(0, np.float32)
+        self.flat = {
+            c: np.ascontiguousarray(np.concatenate(
+                [np.asarray(shards_by_rank[r][c], dtype=np.float32)
+                 if r in shards_by_rank else empty for r in new_ranks])
+                if new_ranks else empty)
+            for c in COMPONENTS}
+        self.dp_ranks = list(new_ranks)
+
+
+class EntryFlattener:
+    """Cached ``ravel_pytree`` unravelers: per entry and whole-model.
+
+    Entry ids are the VirtualCluster's state-space entries (STEM / layer id /
+    HEAD); the whole-model unraveler turns one flat fp32 vector back into
+    ``(stem, [layer_0..layer_{L-1}], head)`` in a single call — the indexed-
+    scatter replacement for the seed's per-entry re-unravel loop.
+    """
+
+    def __init__(self):
+        self._entry_unravel: Dict[int, Any] = {}
+        self._model_unravel = None
+
+    def flatten_entry(self, entry: int, tree) -> np.ndarray:
+        from jax.flatten_util import ravel_pytree
+        vec, unravel = ravel_pytree(tree)
+        self._entry_unravel[entry] = unravel
+        return np.asarray(vec, dtype=np.float32)
+
+    def unflatten_entry(self, entry: int, vec):
+        return self._entry_unravel[entry](vec)
+
+    def build_model_unraveler(self, stem, layers, head) -> None:
+        import jax
+        from jax.flatten_util import ravel_pytree
+        _, unravel = ravel_pytree((stem, list(layers), head))
+        # jit is bit-safe here: unravel is pure slicing/reshaping, and one
+        # compiled call replaces ~2 eager dispatches per model leaf
+        self._model_unravel = jax.jit(unravel)
+
+    def unflatten_model(self, vec):
+        """flat fp32 model vector -> (stem, [layers...], head)."""
+        assert self._model_unravel is not None, "build_model_unraveler() first"
+        stem, layers, head = self._model_unravel(vec)
+        return stem, list(layers), head

@@ -56,6 +56,15 @@ class Layout:
         off = sum(self.layer_sizes[:layer_pos])
         return (off, off + self.layer_sizes[layer_pos])
 
+    def table(self):
+        """The memoized, vectorized equivalent of this layout
+        (``core.statespace.IntervalTable``) — what hot paths should use
+        instead of calling :meth:`owner_intervals` per rank per step.  This
+        pure-Python implementation stays as the reference; equivalence is
+        enforced by ``tests/test_statespace.py``."""
+        from .statespace import get_table
+        return get_table(self.kind, self.layer_sizes, self.dp)
+
 
 def _overlap(a: Interval, b: Interval) -> int:
     return max(0, min(a[1], b[1]) - max(a[0], b[0]))

@@ -15,6 +15,7 @@ from typing import Any, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 @dataclasses.dataclass(frozen=True)
@@ -87,3 +88,28 @@ def adam_update_flat(grad_vec, st, step: int, cfg: AdamConfig):
     upd = (mu / b1t) / (jnp.sqrt(nu / b2t) + cfg.eps) + cfg.weight_decay * st["master"]
     master = st["master"] - cfg.lr * upd
     return master, {"master": master, "mu": mu, "nu": nu}
+
+
+def adam_update_flat_np(grad_vec, st, step: int, cfg: AdamConfig):
+    """Host-side (numpy) mirror of :func:`adam_update_flat`, bit-identical.
+
+    IEEE basic ops (+, -, *, /, sqrt) are correctly rounded in both numpy
+    and XLA's *eager* single-op kernels, so running the same op sequence in
+    f32 produces identical bits — while avoiding the ~8 per-call dispatches
+    and host<->device round-trips of the eager path.  (A *jitted* fused
+    version is NOT equivalent: XLA contracts mul+add chains into FMAs.)
+    Used by the VirtualCluster fast path and the batched SnapshotPool;
+    bit-identity to the eager path is enforced end-to-end by
+    ``tests/test_fast_path_numerics.py``.
+
+    Returns the new state dict {master, mu, nu} (f32 numpy arrays).
+    """
+    g = np.asarray(grad_vec, dtype=np.float32)
+    b1t = np.float32(1.0 - cfg.b1 ** step)
+    b2t = np.float32(1.0 - cfg.b2 ** step)
+    mu = np.float32(cfg.b1) * st["mu"] + np.float32(1 - cfg.b1) * g
+    nu = np.float32(cfg.b2) * st["nu"] + np.float32(1 - cfg.b2) * g * g
+    upd = (mu / b1t) / (np.sqrt(nu / b2t) + np.float32(cfg.eps)) \
+        + np.float32(cfg.weight_decay) * st["master"]
+    master = st["master"] - np.float32(cfg.lr) * upd
+    return {"master": master, "mu": mu, "nu": nu}

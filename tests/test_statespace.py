@@ -1,0 +1,156 @@
+"""Flat-state backbone: vectorized interval tables vs the seed zero.Layout.
+
+The memoized ``statespace.IntervalTable`` must reproduce the pure-Python
+``zero.Layout`` reference exactly — ``owner_intervals`` / ``layer_interval``
+for both layout kinds across dp × layer-size grids, including the last-rank
+remainder — and its gather/scatter/view algebra must be a faithful
+permutation of the stage state space.
+"""
+import numpy as np
+import pytest
+
+from repro.core import zero
+from repro.core.statespace import (COMPONENTS, IntervalTable, StageState,
+                                   get_table)
+
+# dp × layer-size grids; several entries force last-rank remainders
+# (sizes not divisible by dp) for both kinds
+SIZE_GRIDS = [
+    (7,),                    # single layer, remainder for every dp > 1
+    (8, 16, 24),             # divisible by 2/4/8
+    (5, 5, 5),               # odd sizes
+    (97, 64),                # prime-ish + power of two
+    (10,),
+    (33, 1, 129, 12),        # includes a tiny layer smaller than dp
+]
+DPS = [1, 2, 3, 4, 5, 8]
+KINDS = ["contiguous", "interleaved"]
+
+
+@pytest.mark.parametrize("kind", KINDS)
+@pytest.mark.parametrize("dp", DPS)
+@pytest.mark.parametrize("sizes", SIZE_GRIDS)
+class TestLayoutEquivalence:
+    def test_owner_intervals_match_seed(self, kind, dp, sizes):
+        lay = zero.Layout(kind, tuple(sizes), dp)
+        tbl = get_table(kind, sizes, dp)
+        for j in range(dp):
+            assert tbl.owner_intervals(j) == lay.owner_intervals(j), (j,)
+
+    def test_layer_interval_matches_seed(self, kind, dp, sizes):
+        lay = zero.Layout(kind, tuple(sizes), dp)
+        tbl = get_table(kind, sizes, dp)
+        for pos in range(len(sizes)):
+            assert tbl.layer_interval(pos) == lay.layer_interval(pos)
+
+    def test_last_rank_remainder(self, kind, dp, sizes):
+        """The last rank absorbs the remainder: total coverage is exact."""
+        tbl = get_table(kind, sizes, dp)
+        covered = sorted(iv for j in range(dp)
+                         for iv in tbl.owner_intervals(j))
+        cur = 0
+        for s, e in covered:
+            assert s == cur
+            cur = e
+        assert cur == tbl.total == sum(sizes)
+        assert int(tbl.shard_sizes.sum()) == tbl.total
+
+    def test_gather_scatter_roundtrip(self, kind, dp, sizes):
+        tbl = get_table(kind, sizes, dp)
+        rng = np.random.default_rng(hash((kind, dp, sizes)) % 2**32)
+        full = rng.normal(size=tbl.total).astype(np.float32)
+        flat = tbl.gather(full)
+        # shard-order semantics: rank j's view == its interval concatenation
+        for j in range(dp):
+            expect = np.concatenate(
+                [full[s:e] for s, e in tbl.owner_intervals(j)]) \
+                if tbl.total else np.zeros(0, np.float32)
+            np.testing.assert_array_equal(tbl.shard_view(flat, j), expect)
+        np.testing.assert_array_equal(tbl.scatter(flat), full)
+
+    def test_scatter_shard_matches_full_scatter(self, kind, dp, sizes):
+        tbl = get_table(kind, sizes, dp)
+        rng = np.random.default_rng(0)
+        full = rng.normal(size=tbl.total).astype(np.float32)
+        flat = tbl.gather(full)
+        out = np.zeros(tbl.total, np.float32)
+        for j in range(dp):
+            tbl.scatter_shard(j, tbl.shard_view(flat, j), out)
+        np.testing.assert_array_equal(out, full)
+
+    def test_segments_cover_shard(self, kind, dp, sizes):
+        tbl = get_table(kind, sizes, dp)
+        full = np.arange(tbl.total, dtype=np.float32)
+        flat = tbl.gather(full)
+        for j in range(dp):
+            segs = tbl.segments(j, tbl.shard_view(flat, j))
+            assert sorted(segs) == sorted(
+                (s, e) for s, e in tbl.owner_intervals(j))
+            for (s, e), arr in segs.items():
+                np.testing.assert_array_equal(arr, full[s:e])
+
+
+class TestMemoization:
+    def test_get_table_memoized(self):
+        a = get_table("interleaved", (40, 80), 4)
+        b = get_table("interleaved", [40, 80], 4)
+        assert a is b
+
+    def test_layout_table_delegates(self):
+        lay = zero.Layout("contiguous", (96, 32), 3)
+        tbl = lay.table()
+        assert tbl is get_table("contiguous", (96, 32), 3)
+        for j in range(3):
+            assert tbl.owner_intervals(j) == lay.owner_intervals(j)
+
+    def test_owner_intervals_returns_fresh_list(self):
+        """Callers may mutate the returned list without corrupting the cache."""
+        tbl = IntervalTable("interleaved", (64, 64), 2)
+        ivs = tbl.owner_intervals(0)
+        ivs.append((999, 1000))
+        assert tbl.owner_intervals(0) != ivs
+
+
+class TestStageState:
+    def _mk(self, kind="interleaved", dp=3):
+        sizes = [48, 30, 66]
+        rng = np.random.default_rng(1)
+        full = {c: rng.normal(size=sum(sizes)).astype(np.float32)
+                for c in COMPONENTS}
+        st = StageState.from_full([0, 1, 2], sizes, kind,
+                                  list(range(dp)), full)
+        return st, full
+
+    @pytest.mark.parametrize("kind", KINDS)
+    def test_full_roundtrip(self, kind):
+        st, full = self._mk(kind)
+        for c in COMPONENTS:
+            np.testing.assert_array_equal(st.full(c), full[c])
+
+    def test_shards_are_views(self):
+        st, _ = self._mk()
+        sh = st.shards
+        sh[1]["master"][:] = 7.0
+        assert (st.shard(1)["master"] == 7.0).all()
+        # and the flat buffer itself changed
+        tbl = st.table
+        np.testing.assert_array_equal(
+            tbl.shard_view(st.flat["master"], 1), st.shard(1)["master"])
+
+    def test_write_shard(self):
+        st, _ = self._mk()
+        new = {c: np.full_like(st.shard(2)[c], 3.5) for c in COMPONENTS}
+        st.write_shard(2, new)
+        for c in COMPONENTS:
+            np.testing.assert_array_equal(st.shard(2)[c], new[c])
+
+    def test_replace_shards_widens(self):
+        st, full = self._mk(dp=2)
+        wide = get_table(st.layout_kind, st.sizes, 3)
+        shards = {r: {c: np.concatenate(
+            [full[c][s:e] for s, e in wide.owner_intervals(j)])
+            for c in COMPONENTS} for j, r in enumerate([0, 1, 5])}
+        st.replace_shards([0, 1, 5], shards)
+        assert st.dp_ranks == [0, 1, 5]
+        for c in COMPONENTS:
+            np.testing.assert_array_equal(st.full(c), full[c])
