@@ -9,8 +9,8 @@ import traceback
 def main() -> None:
     from . import (communicator_mttr, convergence_consistency, failslow,
                    lse_breakdown, migration_mttr, moe_case, roofline,
-                   scenarios_suite, snapshot_overhead, spot_trace,
-                   throughput_failstop, train_step_perf)
+                   scenarios_suite, serve_bench, snapshot_overhead,
+                   spot_trace, throughput_failstop, train_step_perf)
     print("name,us_per_call,derived")
     mods = [
         ("fig11", throughput_failstop),
@@ -25,6 +25,7 @@ def main() -> None:
         ("roofline", roofline),
         ("scenarios", scenarios_suite),
         ("bench_step", train_step_perf),
+        ("bench_serve", serve_bench),
     ]
     failed = []
     for name, mod in mods:

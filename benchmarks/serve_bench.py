@@ -1,0 +1,140 @@
+"""BENCH_serve — elastic serving plane on the paper's capacity traces.
+
+Replays the Fig.-14 spot traces (A: plateau-heavy, B: shrink-heavy) through
+the continuous-batching :class:`~repro.serving.engine.ServingEngine` via
+``ServeScenarioRunner``, once per recovery policy (ElasWave KV-migration /
+prefix rebuild / SpotServe-less drop baseline), and emits
+``BENCH_serve.json``:
+
+.. code-block:: json
+
+    {
+      "workload": {"n_replicas": 4, "slots_per_replica": 6, ...},
+      "time_scale": 0.02,
+      "traces": {
+        "trace_A": {
+          "elaswave_migrate": {"completed": ..., "dropped": 0,
+                               "ttft_p50": ..., "ttft_p99": ...,
+                               "per_token_p50": ..., "per_token_p99": ...,
+                               "goodput_tokens_per_s": ...,
+                               "slo_attainment": ...,
+                               "drops_per_capacity_change": [...]},
+          "rebuild": {...}, "drop": {...}},
+        "trace_B": {...}},
+      "scale_in_zero_drop": {"dropped": 0, "migrated": ..., "ok": true}
+    }
+
+Traces are time-compressed (``TIME_SCALE``) so the open-loop Poisson stream
+keeps the slot pools busy and capacity changes land on in-flight requests —
+otherwise every policy trivially ties.  Scheduling runs in synthetic token
+mode: the simulated clock (and hence every latency metric) is deterministic
+and replayable; numerics are covered by ``tests/test_serving.py``.
+
+The ``scale_in_zero_drop`` record is the acceptance check: a single-replica
+SCALE_IN under the migration policy must drop ZERO in-flight requests
+(``main`` exits non-zero if it does not hold).
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.core.events import ElasticEvent, EventKind
+from repro.scenarios import Scenario, ServeWorkload, run_serve_scenario
+from repro.serving import SERVE_POLICIES, Request
+from .common import emit
+from .spot_trace import TRACE_A, TRACE_B
+
+TIME_SCALE = 0.02
+POLICIES = ("elaswave_migrate", "rebuild", "drop")
+WORKLOAD = ServeWorkload(mode="synthetic", request_rate=0.15, prompt_len=16,
+                         max_new_tokens=48, max_len=80)
+
+SUMMARY_KEYS = ("n_requests", "completed", "dropped", "rejected",
+                "in_flight_at_end", "deferrals", "migrations", "re_prefills",
+                "ttft_p50", "ttft_p99", "per_token_p50", "per_token_p99",
+                "slo_attainment", "goodput_tokens_per_s", "kv_bytes_moved",
+                "drops_per_capacity_change")
+
+
+def replay(trace_name: str, trace, policy_name: str):
+    scn = Scenario.from_capacity_trace(trace_name, trace, dp=4, pp=2)
+    res = run_serve_scenario(scn, WORKLOAD,
+                             policy=SERVE_POLICIES[policy_name],
+                             time_scale=TIME_SCALE)
+    return {k: res.summary[k] for k in SUMMARY_KEYS}
+
+
+def check_scale_in_zero_drop() -> dict:
+    """Acceptance: a single-replica SCALE_IN with in-flight requests on the
+    departing replica migrates (or rebuilds) every one of them — zero drops,
+    and every request still completes."""
+    engine = WORKLOAD.make_engine(SERVE_POLICIES["elaswave_migrate"])
+    rng = np.random.default_rng(0)
+    for rid in range(2 * WORKLOAD.slots_per_replica):
+        prompt = rng.integers(0, engine.cfg.vocab_size,
+                              size=WORKLOAD.prompt_len).astype(np.int32)
+        engine.submit(Request(rid=rid, arrival=0.0, prompt=prompt,
+                              max_new_tokens=WORKLOAD.max_new_tokens))
+    for _ in range(4):           # get requests resident on every replica
+        engine.tick()
+    assert engine.replicas[0].pool.n_active > 0
+    ranks = tuple(range(WORKLOAD.ranks_per_replica))      # replica 0's node
+    stats = engine.apply_event(
+        ElasticEvent(EventKind.SCALE_IN, 0, ranks, detail="bench acceptance"))
+    engine.drain()
+    s = engine.summary()
+    ok = (stats["dropped"] == 0 and s["dropped"] == 0
+          and s["completed"] == s["n_requests"])
+    return {"event_replicas": stats["replicas"], "dropped": stats["dropped"],
+            "migrated": stats["migrated"], "rebuilt": stats["rebuilt"],
+            "kv_bytes_moved": stats["kv_bytes_moved"],
+            "completed": s["completed"], "n_requests": s["n_requests"],
+            "ok": bool(ok)}
+
+
+def run(verbose: bool = True) -> dict:
+    traces = {}
+    for tname, trace in (("trace_A", TRACE_A), ("trace_B", TRACE_B)):
+        traces[tname] = {}
+        for pname in POLICIES:
+            s = traces[tname][pname] = replay(tname, trace, pname)
+            if verbose:
+                print(f"  {tname} {pname}: done={s['completed']}"
+                      f"/{s['n_requests']} dropped={s['dropped']} "
+                      f"migr={s['migrations']} re_prefill={s['re_prefills']} "
+                      f"ttft_p99={s['ttft_p99']:.2f}s "
+                      f"goodput={s['goodput_tokens_per_s']:.0f}tok/s")
+    zero_drop = check_scale_in_zero_drop()
+    if verbose:
+        print(f"  scale_in_zero_drop: dropped={zero_drop['dropped']} "
+              f"migrated={zero_drop['migrated']} "
+              f"rebuilt={zero_drop['rebuilt']} ok={zero_drop['ok']}")
+    return {"workload": WORKLOAD.describe(), "time_scale": TIME_SCALE,
+            "traces": traces, "scale_in_zero_drop": zero_drop}
+
+
+def main(out_path: str = "BENCH_serve.json"):
+    t0 = time.perf_counter()
+    result = run()
+    us = (time.perf_counter() - t0) * 1e6
+    Path(out_path).write_text(json.dumps(result, indent=2, sort_keys=True,
+                                         default=float) + "\n")
+    a, b = result["traces"]["trace_A"], result["traces"]["trace_B"]
+    emit("bench_serve", us,
+         f"dropsA_migrate={a['elaswave_migrate']['dropped']};"
+         f"dropsA_drop={a['drop']['dropped']};"
+         f"dropsB_migrate={b['elaswave_migrate']['dropped']};"
+         f"dropsB_drop={b['drop']['dropped']};"
+         f"zero_drop_ok={result['scale_in_zero_drop']['ok']}")
+    if not result["scale_in_zero_drop"]["ok"]:
+        raise SystemExit("serve bench: single-replica SCALE_IN dropped "
+                         "in-flight requests under the migration policy")
+    return result
+
+
+if __name__ == "__main__":
+    main()

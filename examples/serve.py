@@ -1,68 +1,27 @@
-"""Batched serving example: prefill + decode with KV caches on a reduced
-config of an assigned architecture.
+"""Batched serving example: continuous-batching generation with KV caches on
+a reduced config of an assigned architecture — including enc-dec archs
+(the engine prepares encoder outputs per request).
 
-    PYTHONPATH=src python examples/serve.py [--arch codeqwen1p5_7b] [--tokens 32]
+    PYTHONPATH=src python examples/serve.py [--arch codeqwen1p5_7b] \
+        [--tokens 32] [--temperature 0.8]
+
+Thin wrapper over :func:`repro.serving.offline_generate`; the elastic parts
+(SLO admission, KV-cache migration across replicas) are exercised by
+``benchmarks/serve_bench.py`` and ``tests/test_serving.py``.
 """
 import argparse
-import time
-
-import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro import configs
-from repro.models import registry as R
-from repro.models import transformer as T
+from repro.launch.serve import add_generation_args, run_smoke
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="codeqwen1p5_7b",
                     choices=configs.ARCH_IDS)
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--tokens", type=int, default=32)
+    add_generation_args(ap)
     args = ap.parse_args()
-
-    cfg = configs.get_smoke_config(args.arch)
-    if cfg.is_encdec:
-        raise SystemExit("use an LM arch for this example (enc-dec: see tests)")
-    print(f"serving {cfg.name}: batch={args.batch}, "
-          f"prompt={args.prompt_len}, decode={args.tokens} tokens")
-
-    params = R.init_model(jax.random.key(0), cfg)
-    max_len = args.prompt_len + args.tokens
-    caches = T.init_caches(cfg, args.batch, max_len)
-    prompts = jax.random.randint(jax.random.key(1),
-                                 (args.batch, args.prompt_len), 0,
-                                 cfg.vocab_size)
-
-    prefill = jax.jit(lambda p, c, t: T.prefill(p, cfg, t, c))
-    decode = jax.jit(lambda p, c, t, i: T.decode_step(p, cfg, t, c, i))
-
-    t0 = time.time()
-    logits, caches = prefill(params, caches, prompts)
-    logits.block_until_ready()
-    t_prefill = time.time() - t0
-    print(f"prefill: {t_prefill * 1e3:.1f} ms "
-          f"({args.batch * args.prompt_len / t_prefill:.0f} tok/s)")
-
-    tok = jnp.argmax(logits[:, -1, :], axis=-1)[:, None]
-    out = [tok]
-    t0 = time.time()
-    for i in range(args.tokens - 1):
-        logits, caches = decode(params, caches, tok,
-                                jnp.int32(args.prompt_len + i))
-        tok = jnp.argmax(logits[:, -1, :], axis=-1)[:, None]
-        out.append(tok)
-    jax.block_until_ready(tok)
-    t_dec = time.time() - t0
-    seqs = np.concatenate([np.asarray(t) for t in out], axis=1)
-    print(f"decode: {t_dec / (args.tokens - 1) * 1e3:.1f} ms/token "
-          f"({args.batch * (args.tokens - 1) / t_dec:.0f} tok/s)")
-    print("greedy continuations (token ids):")
-    for b in range(args.batch):
-        print(f"  [{b}] {seqs[b][:16].tolist()}...")
+    run_smoke(args.arch, args)
 
 
 if __name__ == "__main__":

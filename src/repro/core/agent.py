@@ -4,6 +4,13 @@ Co-located with each (virtual) worker; hooks heartbeat/step-time probes and
 relays elastic events to the Core.  Fail-stop: missed heartbeats.  Fail-slow:
 step-time z-score over a rolling window against the stage's peer median.
 Scheduler signals (scale in/out) are injected directly.
+
+Rank membership is DYNAMIC: the monitored set changes with the cluster.
+``add_rank`` registers a worker granted by SCALE_OUT (or a rejoin — stale
+dead/slow verdicts are cleared so a later failure of the same rank is
+re-detected), ``remove_rank`` retires one that left.  Both the training
+``VirtualCluster`` and the serving engine wire these from their apply paths;
+probes for unregistered ranks are ignored.
 """
 from __future__ import annotations
 
@@ -28,30 +35,58 @@ class Probe:
 class Agent:
     def __init__(self, num_ranks: int, window: int = 8,
                  slow_threshold: float = 1.3, miss_limit: int = 2):
-        self.num_ranks = num_ranks
         self.window = window
         self.slow_threshold = slow_threshold
         self.miss_limit = miss_limit
-        self.misses: Dict[int, int] = {r: 0 for r in range(num_ranks)}
-        self.times: Dict[int, Deque[float]] = {
-            r: deque(maxlen=window) for r in range(num_ranks)}
+        self.misses: Dict[int, int] = {}
+        self.times: Dict[int, Deque[float]] = {}
         self.reported_slow: set = set()
         self.reported_dead: set = set()
+        for r in range(num_ranks):
+            self.add_rank(r)
+
+    @property
+    def ranks(self) -> List[int]:
+        """Currently monitored ranks (sorted)."""
+        return sorted(self.times)
+
+    @property
+    def num_ranks(self) -> int:
+        return len(self.times)
+
+    def add_rank(self, rank: int):
+        """Register a rank (SCALE_OUT / rejoin).  Health history restarts
+        fresh and stale verdicts are cleared, so a rank that rejoins and
+        later fails again is re-detected."""
+        self.misses[rank] = 0
+        self.times[rank] = deque(maxlen=self.window)
+        self.reported_dead.discard(rank)
+        self.reported_slow.discard(rank)
+
+    def remove_rank(self, rank: int):
+        """Retire a rank that left (recovered fail-stop / scale-in): it no
+        longer accrues misses or participates in the fleet median."""
+        self.misses.pop(rank, None)
+        self.times.pop(rank, None)
+        self.reported_dead.discard(rank)
+        self.reported_slow.discard(rank)
 
     def observe(self, probes: List[Probe]) -> List[ElasticEvent]:
         events: List[ElasticEvent] = []
         step = probes[0].step if probes else 0
         seen = set()
         for p in probes:
+            if p.rank not in self.times:      # unregistered: ignore
+                continue
             seen.add(p.rank)
             if not p.heartbeat:
                 self.misses[p.rank] += 1
             else:
                 self.misses[p.rank] = 0
                 self.times[p.rank].append(p.step_seconds)
-        for r in range(self.num_ranks):
+        for r in self.ranks:
             if r not in seen:
-                self.misses[r] = self.misses.get(r, 0) + 1
+                self.misses[r] += 1
             if self.misses[r] >= self.miss_limit and r not in self.reported_dead:
                 self.reported_dead.add(r)
                 events.append(ElasticEvent(EventKind.FAIL_STOP, step, (r,),

@@ -480,6 +480,10 @@ class VirtualCluster:
                     if self.alive[dd, dv.rank]:
                         self.freq[dd, dv.rank] = max(self.freq[dd, dv.rank], dv.freq)
 
+        # the departed rank leaves the Agent's monitored set (it must not
+        # accrue misses forever; a SCALE_OUT rejoin re-registers it)
+        self.agent.remove_rank(rank)
+
         rec = _recovery_record(
             detect=t_detect, plan=plan.plan_seconds,
             communicator=comm_stats.seconds, remap=t_remap, migration=t_migr,
@@ -494,6 +498,10 @@ class VirtualCluster:
         resize back to the wider DP width (paper Fig. 8 scale-up)."""
         assert not self.alive[d, p], "worker already alive"
         self.alive[d, p] = True
+        # dynamic rank registration: the (re)joining worker gets fresh
+        # heartbeat/step-time tracking (clears any stale dead verdict, so a
+        # rejoin that later fails again is re-detected)
+        self.agent.add_rank(d * self.pp + p)
         comm_stats = self.comm.edit(add=[(g, d * self.pp + p)
                                          for g in self.comm.groups
                                          if g == f"dp_stage{p}_tp0"])

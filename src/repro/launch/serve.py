@@ -1,14 +1,53 @@
-"""Serving launcher: batched prefill + decode on a reduced config, or
---dryrun lowering of the full config's serving cells on the production mesh.
+"""Serving launcher: batched generation through the elastic serving engine
+on a reduced config, or --dryrun lowering of the full config's serving cells
+on the production mesh.
 
     PYTHONPATH=src python -m repro.launch.serve --arch codeqwen1p5_7b --smoke
     PYTHONPATH=src python -m repro.launch.serve --arch deepseek_v3_671b \
         --dryrun --shape decode_32k [--multi-pod]
+
+The smoke path is a thin wrapper over
+:func:`repro.serving.offline_generate` — the same continuous-batching engine
+the elastic benchmarks drive, so every family the registry lowers (enc-dec
+included) serves through one code path.
 """
 from __future__ import annotations
 
 import argparse
-import time
+
+
+def add_generation_args(ap: argparse.ArgumentParser):
+    """Generation flags shared with examples/serve.py."""
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--tokens", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy; > 0 enables seeded top-k sampling")
+    ap.add_argument("--top-k", type=int, default=40)
+    ap.add_argument("--seed", type=int, default=0)
+
+
+def run_smoke(arch: str, args) -> dict:
+    """Generate through the serving engine; returns offline_generate's dict."""
+    from repro import configs
+    from repro.serving import SamplerConfig, offline_generate
+
+    cfg = configs.get_smoke_config(arch)
+    sampler = (SamplerConfig() if args.temperature <= 0 else
+               SamplerConfig(method="topk", temperature=args.temperature,
+                             top_k=args.top_k, seed=args.seed))
+    print(f"serving {cfg.name}: batch={args.batch} prompt={args.prompt_len} "
+          f"decode={args.tokens} sampler={sampler.describe()}")
+    out = offline_generate(cfg, batch=args.batch, prompt_len=args.prompt_len,
+                           max_new_tokens=args.tokens, seed=args.seed,
+                           sampler=sampler)
+    s = out["summary"]
+    total = s["tokens_decoded"]
+    print(f"generated {total} tokens in {out['wall_seconds']:.2f}s wall "
+          f"({total / out['wall_seconds']:.0f} tok/s aggregate)")
+    for b in range(args.batch):
+        print(f"  [{b}] {out['sequences'][b][:16].tolist()}...")
+    return out
 
 
 def main():
@@ -19,9 +58,7 @@ def main():
     ap.add_argument("--shape", default="decode_32k",
                     choices=["prefill_32k", "decode_32k", "long_500k"])
     ap.add_argument("--multi-pod", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--tokens", type=int, default=16)
+    add_generation_args(ap)
     args = ap.parse_args()
 
     if args.dryrun:
@@ -32,45 +69,7 @@ def main():
                "--mesh", "multi" if args.multi_pod else "single"]
         raise SystemExit(subprocess.call(cmd))
 
-    import jax
-    import jax.numpy as jnp
-    from repro import configs
-    from repro.models import registry as R
-    from repro.models import transformer as T
-    from repro.models import encdec as E
-
-    cfg = configs.get_smoke_config(args.arch)
-    params = R.init_model(jax.random.key(0), cfg)
-    max_len = args.prompt_len + args.tokens
-    prompts = jax.random.randint(jax.random.key(1),
-                                 (args.batch, args.prompt_len), 0,
-                                 cfg.vocab_size)
-    print(f"serving {cfg.name}: batch={args.batch} prompt={args.prompt_len} "
-          f"decode={args.tokens}")
-    t0 = time.time()
-    if cfg.is_encdec:
-        frames = jax.random.normal(jax.random.key(2),
-                                   (args.batch, 16, cfg.d_model))
-        enc = E.encode(params, cfg, frames)
-        caches = E.init_decoder_caches(cfg, args.batch, max_len)
-        logits, caches = E.decode(params, cfg, prompts, enc,
-                                  caches=caches, cache_index=0)
-        step = jax.jit(lambda p, c, t, i: E.encdec_decode_step(p, cfg, t, enc, c, i))
-    else:
-        caches = T.init_caches(cfg, args.batch, max_len)
-        logits, caches = T.prefill(params, cfg, prompts, caches)
-        step = jax.jit(lambda p, c, t, i: T.decode_step(p, cfg, t, c, i))
-    tok = jnp.argmax(logits[:, -1:, :], axis=-1)
-    print(f"prefill: {(time.time() - t0) * 1e3:.0f} ms")
-    t0 = time.time()
-    for i in range(args.tokens - 1):
-        logits, caches = step(params, caches, tok,
-                              jnp.int32(args.prompt_len + i))
-        tok = jnp.argmax(logits[:, -1:, :], axis=-1)
-    jax.block_until_ready(tok)
-    dt = (time.time() - t0) / max(args.tokens - 1, 1)
-    print(f"decode: {dt * 1e3:.1f} ms/token "
-          f"({args.batch / dt:.0f} tok/s aggregate)")
+    run_smoke(args.arch, args)
 
 
 if __name__ == "__main__":

@@ -6,7 +6,8 @@ pipeline stages.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List, Optional
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -79,6 +80,69 @@ def make_train_loss(cfg: ModelConfig, use_pallas: bool = False, remat: bool = Fa
             return T.train_loss(params, cfg, batch, rng_ctx,
                                 use_pallas=use_pallas, remat=remat)
     return loss_fn
+
+
+# ---- serving decode-step hooks (repro.serving engine) ----------------------
+@dataclasses.dataclass(frozen=True)
+class ServingHooks:
+    """Uniform prefill/decode interface over all families, used by the
+    elastic serving engine (``repro.serving``).  Cache pytrees carry the
+    slot/batch dimension on axis 1 (stacked layer axis first); ``extras`` is
+    a per-slot pytree with the slot dimension on axis 0 (e.g. an enc-dec
+    encoder output), or ``None`` for decoder-only families.
+
+    * ``prefill(params, tokens [B,S], caches, extras)`` -> (logits [B,V],
+      caches): writes the whole prefix at positions ``0..S-1``.
+    * ``decode_step(params, tokens [B,1], caches, positions [B], extras)``
+      -> (logits [B,V], caches): per-slot write offsets, so one batched call
+      serves slots at different sequence lengths (continuous batching).
+    """
+    init_caches: Callable[[int, int], Any]          # (batch, max_len)
+    prefill: Callable[..., Any]
+    decode_step: Callable[..., Any]
+    prepare_extras: Callable[..., Any]              # (params, request)
+
+
+def serving_hooks(cfg: ModelConfig) -> ServingHooks:
+    if cfg.is_encdec:
+        def init_caches(batch, max_len):
+            return E.init_decoder_caches(cfg, batch, max_len)
+
+        def prepare_extras(params, req):
+            frames = jnp.asarray(req.encoder_frames)[None]     # [1, T, d]
+            return {"enc": E.encode(params, cfg, frames)}
+
+        def prefill(params, tokens, caches, extras):
+            logits, caches = E.decode(params, cfg, tokens, extras["enc"],
+                                      caches=caches, cache_index=0)
+            return logits[:, -1, :], caches
+
+        def decode_step(params, tokens, caches, positions, extras):
+            logits, caches = E.decode(params, cfg, tokens, extras["enc"],
+                                      caches=caches, cache_index=positions)
+            return logits[:, -1, :], caches
+    else:
+        def init_caches(batch, max_len):
+            return T.init_caches(cfg, batch, max_len)
+
+        def prepare_extras(params, req):
+            del params, req
+            return None
+
+        def prefill(params, tokens, caches, extras):
+            del extras
+            logits, caches = T.prefill(params, cfg, tokens, caches)
+            return logits[:, -1, :], caches
+
+        def decode_step(params, tokens, caches, positions, extras):
+            del extras
+            logits, caches = T.decode_step(params, cfg, tokens, caches,
+                                           cache_index=positions)
+            return logits[:, -1, :], caches
+
+    return ServingHooks(init_caches=init_caches, prefill=prefill,
+                        decode_step=decode_step,
+                        prepare_extras=prepare_extras)
 
 
 def tiny_config(family: str = "dense", **kw) -> ModelConfig:

@@ -15,11 +15,13 @@ from .library import SCENARIOS, get_scenario
 from .metrics import MetricsCollector, ScenarioResult
 from .runner import (AnalyticScenarioRunner, ClusterScenarioRunner,
                      run_scenario)
+from .serve import ServeScenarioRunner, ServeWorkload, run_serve_scenario
 from .spec import (AnalyticWorkload, ClusterWorkload, Scenario,
                    node_shrink_cells)
 
 __all__ = [
     "AnalyticScenarioRunner", "AnalyticWorkload", "ClusterScenarioRunner",
     "ClusterWorkload", "MetricsCollector", "SCENARIOS", "Scenario",
-    "ScenarioResult", "get_scenario", "node_shrink_cells", "run_scenario",
+    "ScenarioResult", "ServeScenarioRunner", "ServeWorkload", "get_scenario",
+    "node_shrink_cells", "run_scenario", "run_serve_scenario",
 ]

@@ -1,0 +1,61 @@
+"""Seeded token sampling, content-addressed through the RNG planner.
+
+The paper's computation-consistency invariant (§4.4) extends to serving: a
+sampled token must not depend on *which replica or slot* computed it.  The
+key for the token at absolute position ``pos`` of request ``rid`` is
+
+    stream_key(base_key, step=pos, layer_id=SAMPLE_STREAM_ID, sample_id=rid)
+
+— the same content-addressed derivation ``core/planners/rng.py`` uses for
+dropout streams, with a reserved pseudo-layer id for the sampling head.  KV
+migration, requeue-with-prefix rebuilds and replica changes therefore leave
+sampled streams bit-identical (tested in ``tests/test_serving.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.planners.rng import stream_key
+
+# reserved pseudo layer id for the sampling head — disjoint from any real
+# model layer id so sampling never collides with a dropout stream
+SAMPLE_STREAM_ID = 1 << 20
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplerConfig:
+    method: str = "greedy"        # "greedy" | "topk"
+    temperature: float = 1.0
+    top_k: int = 0                # 0 = full vocab
+    seed: int = 0
+
+    def describe(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def sample_tokens(logits, rids: Sequence[int], positions: Sequence[int],
+                  sc: SamplerConfig) -> np.ndarray:
+    """logits: [B, V] -> token ids [B].  ``positions[b]`` is the absolute
+    position of the token being sampled for request ``rids[b]``."""
+    logits = np.asarray(logits, dtype=np.float32)
+    if sc.method == "greedy":
+        return np.argmax(logits, axis=-1).astype(np.int64)
+    if sc.method != "topk":
+        raise ValueError(f"unknown sampling method {sc.method!r}")
+    import jax
+    import jax.numpy as jnp
+    base = jax.random.key(sc.seed)
+    out = np.zeros(len(rids), dtype=np.int64)
+    for b, (rid, pos) in enumerate(zip(rids, positions)):
+        key = stream_key(base, int(pos), SAMPLE_STREAM_ID, int(rid))
+        row = jnp.asarray(logits[b])
+        if sc.top_k and sc.top_k < row.shape[-1]:
+            vals, idx = jax.lax.top_k(row, sc.top_k)
+        else:
+            vals, idx = row, jnp.arange(row.shape[-1])
+        choice = jax.random.categorical(key, vals / max(sc.temperature, 1e-6))
+        out[b] = int(idx[choice])
+    return out

@@ -1,0 +1,282 @@
+"""Elastic serving plane: continuous batching, SLO admission, KV-cache
+migration bit-exactness, sampled-stream reproducibility across migration,
+recovery-policy dispositions, scenario runner schema, and the Agent's
+dynamic rank registration (see docs/ARCHITECTURE.md)."""
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.agent import Agent, Probe
+from repro.core.events import ElasticEvent, EventKind
+from repro.models import registry as R
+from repro.scenarios import Scenario, ServeWorkload, run_serve_scenario
+from repro.serving import (SERVE_POLICIES, KVPool, DropPolicy, Request,
+                           RequestState, SLO, SamplerConfig, ServingEngine,
+                           migrate_slot, offline_generate, sample_tokens)
+
+
+def tiny_cfg(**kw):
+    base = dict(num_layers=2, d_model=32, num_heads=2, num_kv_heads=1,
+                d_ff=64, vocab_size=128, dropout_rate=0.0)
+    base.update(kw)
+    return R.tiny_config("dense", **base)
+
+
+def submit_n(engine, n, prompt_len=6, max_new=4, seed=0):
+    rng = np.random.default_rng(seed)
+    for rid in range(n):
+        prompt = rng.integers(0, engine.cfg.vocab_size,
+                              size=prompt_len).astype(np.int32)
+        engine.submit(Request(rid=rid, arrival=0.0, prompt=prompt,
+                              max_new_tokens=max_new))
+
+
+def sequences(engine, n):
+    return [list(engine.requests[rid].generated) for rid in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# numeric: migration bit-exactness (greedy and sampled streams)
+# ---------------------------------------------------------------------------
+class TestMigrationBitExact:
+    @pytest.mark.parametrize("sampler", [
+        SamplerConfig(),                                        # greedy
+        SamplerConfig(method="topk", temperature=0.7, top_k=8, seed=3),
+    ], ids=["greedy", "topk"])
+    def test_scale_in_migration_is_invisible_to_tokens(self, sampler):
+        """A mid-stream single-replica SCALE_IN migrates every in-flight
+        request (zero drops) and the decoded streams are bit-identical to an
+        undisturbed run — for greedy AND seeded top-k sampling (the sampling
+        key is (rid, absolute position), not (replica, slot))."""
+        cfg = tiny_cfg()
+
+        def make():
+            eng = ServingEngine(cfg, n_replicas=2, slots_per_replica=3,
+                                max_len=16, mode="numeric", seed=0,
+                                sampler=sampler)
+            submit_n(eng, 3)
+            return eng
+
+        base = make()
+        base.drain()
+        want = sequences(base, 3)
+        assert all(len(s) == 4 for s in want)
+
+        eng = make()
+        eng.tick()                      # admit + prefill everywhere
+        eng.tick()                      # one batched decode step
+        assert eng.replicas[0].pool.n_active > 0
+        stats = eng.apply_event(
+            ElasticEvent(EventKind.SCALE_IN, 0, (0,)))
+        assert stats["migrated"] == 2 and stats["dropped"] == 0
+        assert stats["kv_bytes_moved"] > 0
+        assert sorted(eng.replicas) == [1]
+        eng.drain()
+
+        assert sequences(eng, 3) == want
+        s = eng.summary()
+        assert s["completed"] == 3 and s["dropped"] == 0
+        assert s["migrations"] == 2
+
+
+# ---------------------------------------------------------------------------
+# numeric: offline generation (enc-dec fixed to work, not rejected)
+# ---------------------------------------------------------------------------
+class TestOfflineGenerate:
+    def test_encdec_serves_through_engine(self):
+        cfg = R.tiny_config("audio", dropout_rate=0.0)
+        out = offline_generate(cfg, batch=2, prompt_len=3, max_new_tokens=3,
+                               seed=0, frames_len=8)
+        assert out["sequences"].shape == (2, 3)
+        assert out["summary"]["completed"] == 2
+        assert out["summary"]["dropped"] == 0
+
+
+# ---------------------------------------------------------------------------
+# synthetic: policy dispositions, rebuild invariance, SLO admission
+# ---------------------------------------------------------------------------
+def synthetic_engine(policy=None, n_replicas=2, slots=2, slo=None,
+                     max_len=32):
+    return ServingEngine(tiny_cfg(), n_replicas=n_replicas,
+                         slots_per_replica=slots, max_len=max_len,
+                         mode="synthetic", policy=policy, slo=slo)
+
+
+class TestRecoveryPolicies:
+    def test_fail_stop_rebuilds_and_streams_unchanged(self):
+        base = synthetic_engine()
+        submit_n(base, 4)
+        base.drain()
+        want = sequences(base, 4)
+
+        eng = synthetic_engine()
+        submit_n(eng, 4)
+        eng.tick()
+        eng.tick()
+        stats = eng.apply_event(ElasticEvent(EventKind.FAIL_STOP, 0, (0,)))
+        assert stats["rebuilt"] == 2 and stats["dropped"] == 0
+        assert stats["stall_seconds"] >= eng.cost.detect_seconds
+        eng.drain()
+        assert sequences(eng, 4) == want        # (rid, pos)-content tokens
+        assert eng.summary()["re_prefills"] == 2
+        assert eng.summary()["completed"] == 4
+
+    def test_drop_policy_loses_in_flight(self):
+        eng = synthetic_engine(policy=DropPolicy())
+        submit_n(eng, 4)
+        eng.tick()
+        eng.tick()
+        stats = eng.apply_event(ElasticEvent(EventKind.SCALE_IN, 0, (0,)))
+        assert stats["dropped"] == 2
+        eng.drain()
+        s = eng.summary()
+        assert s["dropped"] == 2 and s["completed"] == 2
+        dropped = [r for r in eng.requests.values()
+                   if r.state == RequestState.DROPPED]
+        assert len(dropped) == 2
+
+    def test_scale_out_adds_replica_and_agent_rank(self):
+        eng = synthetic_engine(n_replicas=1)
+        eng.apply_event(ElasticEvent(EventKind.SCALE_OUT, 0, (3,)))
+        assert sorted(eng.replicas) == [0, 3]
+        assert eng.agent.ranks == [0, 3]
+
+
+class TestSLOAdmission:
+    def test_blown_ttft_is_rejected_at_first_admission(self):
+        eng = synthetic_engine(slo=SLO(ttft=0.01, per_token=1.0), max_len=80)
+        prompt = np.zeros(64, dtype=np.int32)   # prefill alone blows 10 ms
+        eng.submit(Request(rid=0, arrival=0.0, prompt=prompt,
+                           max_new_tokens=4))
+        eng.tick()
+        assert eng.requests[0].state == RequestState.REJECTED
+        assert eng.summary()["rejected"] == 1
+
+    def test_full_pools_defer_but_eventually_serve(self):
+        eng = synthetic_engine(n_replicas=1, slots=2)
+        submit_n(eng, 5)
+        eng.tick()
+        assert eng.n_active == 2 and eng.deferrals >= 1
+        eng.drain()
+        s = eng.summary()
+        assert s["completed"] == 5 and s["rejected"] == 0
+
+
+# ---------------------------------------------------------------------------
+# kv pool mechanics
+# ---------------------------------------------------------------------------
+class TestKVPool:
+    def test_migrate_slot_moves_exact_arrays(self):
+        caches = {"k": jnp.arange(2 * 3 * 8 * 4, dtype=jnp.float32)
+                  .reshape(2, 3, 8, 4)}
+        src = KVPool(3, caches)
+        dst = KVPool(3, {"k": jnp.zeros((2, 3, 8, 4), jnp.float32)})
+        src.assign(1, rid=7, length=5)
+        moved = migrate_slot(src, 1, dst, 2, rid=7)
+        assert moved > 0
+        assert src.slot_req[1] == -1 and dst.slot_req[2] == 7
+        assert int(dst.lengths[2]) == 5
+        np.testing.assert_array_equal(np.asarray(dst.caches["k"][:, 2]),
+                                      np.asarray(caches["k"][:, 1]))
+
+    def test_sample_tokens_deterministic_in_rid_and_position(self):
+        sc = SamplerConfig(method="topk", temperature=0.8, top_k=4, seed=1)
+        logits = np.random.default_rng(0).standard_normal((2, 32))
+        a = sample_tokens(logits, [5, 9], [3, 3], sc)
+        b = sample_tokens(logits, [5, 9], [3, 3], sc)
+        np.testing.assert_array_equal(a, b)    # replayable stream
+        # the key is content-addressed in (rid, position): the draw for
+        # (rid=5, pos=3) is the same regardless of its row in the batch
+        c = sample_tokens(logits[::-1], [9, 5], [3, 3], sc)
+        assert int(c[1]) == int(a[0])
+        assert all(0 <= int(t) < 32 for t in c)
+
+
+# ---------------------------------------------------------------------------
+# scenario runner + artifact schema
+# ---------------------------------------------------------------------------
+class TestServeScenarioRunner:
+    TRACE = [(60, 0), (60, 1), (60, 2), (60, 0)]
+
+    def run(self, policy):
+        scn = Scenario.from_capacity_trace("serve_t", self.TRACE, dp=4, pp=2)
+        w = ServeWorkload(mode="synthetic", request_rate=0.15,
+                          max_new_tokens=48, max_len=80)
+        # compress hard so the open-loop stream keeps slots busy and the
+        # capacity changes land on in-flight requests (same as serve_bench)
+        return run_serve_scenario(scn, w, policy=SERVE_POLICIES[policy],
+                                  time_scale=0.02)
+
+    def test_migrate_policy_drops_nothing_drop_policy_does(self):
+        mig = self.run("elaswave_migrate")
+        drp = self.run("drop")
+        assert mig.summary["dropped"] == 0
+        assert mig.summary["migrations"] + mig.summary["re_prefills"] > 0
+        assert drp.summary["dropped"] > 0
+        assert mig.summary["completed"] > drp.summary["completed"]
+
+    def test_result_schema_round_trips(self):
+        res = self.run("rebuild")
+        blob = json.loads(res.to_json())
+        assert blob["mode"] == "serving"
+        assert blob["workload"]["n_replicas"] == 4
+        assert blob["steps"] and blob["recoveries"]
+        rec = blob["recoveries"][0]
+        assert {"migrated", "rebuilt", "dropped",
+                "kv_bytes_moved"} <= set(rec["serving"])
+        for k in ("ttft_p50", "ttft_p99", "per_token_p50", "per_token_p99",
+                  "goodput_tokens_per_s", "slo_attainment",
+                  "drops_per_capacity_change"):
+            assert k in blob["summary"]
+
+
+# ---------------------------------------------------------------------------
+# agent: dynamic rank membership
+# ---------------------------------------------------------------------------
+class TestAgentDynamicRanks:
+    def probes(self, agent, dead=()):
+        return [Probe(step=0, rank=r, heartbeat=r not in dead,
+                      step_seconds=0.1) for r in agent.ranks]
+
+    def test_membership_and_unregistered_probes_ignored(self):
+        a = Agent(num_ranks=2, miss_limit=2)
+        assert a.ranks == [0, 1]
+        a.remove_rank(1)
+        assert a.ranks == [0] and a.num_ranks == 1
+        # probes for retired ranks are ignored, not KeyErrors
+        evs = a.observe([Probe(step=0, rank=1, heartbeat=False,
+                               step_seconds=0.1),
+                         Probe(step=0, rank=0, heartbeat=True,
+                               step_seconds=0.1)])
+        assert evs == []
+        a.add_rank(3)
+        assert a.ranks == [0, 3]
+
+    def test_rejoined_rank_is_redetected_after_second_failure(self):
+        a = Agent(num_ranks=2, miss_limit=2)
+        for _ in range(2):
+            evs = a.observe(self.probes(a, dead={1}))
+        assert [e.kind for e in evs] == [EventKind.FAIL_STOP]
+        a.remove_rank(1)              # recovery retires it
+        a.add_rank(1)                 # ...then it rejoins
+        evs = []
+        for _ in range(2):
+            evs = a.observe(self.probes(a, dead={1}))
+        assert [e.kind for e in evs] == [EventKind.FAIL_STOP]
+
+    def test_cluster_rejoin_then_fail_is_redetected(self):
+        """End-to-end through the VirtualCluster wiring: fail -> recover
+        (remove_rank) -> scale-out rejoin (add_rank) -> fail again must be
+        re-detected, which the static-membership agent could not do."""
+        from repro.core.cluster import VirtualCluster
+        cl = VirtualCluster(R.tiny_config("dense", num_layers=2), dp=2, pp=2,
+                            global_batch=4, num_micro=2, seq_len=8, seed=0)
+        cl.inject_fail_stop(1, 1)
+        assert cl.detect_and_recover() is not None
+        assert 3 not in cl.agent.ranks
+        cl.recover_scale_out(1, 1)
+        assert 3 in cl.agent.ranks
+        cl.inject_fail_stop(1, 1)
+        assert cl.detect_and_recover() is not None
