@@ -1,0 +1,148 @@
+"""BENCH_analytic_scale — the rank-vectorized analytic plane at paper scale.
+
+Sweeps the cluster size 10^3 -> 10^5 ranks (Llama-2-7B layers over pp=8,
+DP widened to fill), fires a correlated 2-rack-domain fail-stop burst plus a
+later whole-domain rejoin, and prices the full scenario — policy decisions,
+communicator edit-vs-partial-vs-full accounting, MTTR — end-to-end through
+``AnalyticScenarioRunner`` for ElasWave, TorchFT and the Oobleck-style
+pipeline-template fallback.
+
+``BENCH_analytic_scale.json``:
+
+.. code-block:: json
+
+    {
+      "sweep": {"100000": {"elaswave": {
+          "wall_seconds": 0.7, "time_avg_rel_throughput": 0.75,
+          "edit_seconds": ..., "partial_rebuild_seconds": ...,
+          "full_rebuild_seconds": ..., "n_burst_ranks": 128}, ...}, ...},
+      "oracle_ok": true,          // vectorized == dict/set legacy at 32 ranks
+      "budget_s": 10.0, "gate_ok": true
+    }
+
+CI gate: the largest swept size must price each policy's whole scenario in
+under ``ANALYTIC_SCALE_BUDGET_S`` wall-clock seconds (exit 1 otherwise).
+Env knobs: ``ANALYTIC_SCALE_MAX_RANKS`` caps the sweep (CI uses 10^4),
+``ANALYTIC_SCALE_BUDGET_S`` sets the budget (default 10 s, the acceptance
+bar for the 10^5 sweep).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from pathlib import Path
+
+from repro.core.legacy_comm import LegacyDynamicCommunicator
+from repro.core.policies import ElasWavePolicy, OobleckPolicy, TorchFTPolicy
+from repro.scenarios import AnalyticScenarioRunner, AnalyticWorkload, Scenario
+
+from .common import LLAMA2, WORKER_HW, emit
+
+PP = 8
+DOMAIN_SIZE = 64          # ranks per rack domain (8 replicas at pp=8)
+SWEEP = (1_000, 10_000, 100_000)
+
+
+def _workload(n_ranks: int) -> AnalyticWorkload:
+    base = LLAMA2["llama2-7b"]
+    dp = n_ranks // PP
+    return AnalyticWorkload(cfg=base["cfg"], dp=dp, pp=PP, mbs=1,
+                            global_batch=PP * dp, seq=base["seq"],
+                            hw=WORKER_HW, domain_size=DOMAIN_SIZE)
+
+
+def _scenario(w: AnalyticWorkload) -> Scenario:
+    dom = w.domains
+    return Scenario.domain_burst("domain_burst", step=10,
+                                 domain_ids=dom.sample(2, seed=7),
+                                 domains=dom, horizon=100, regrow_step=60)
+
+
+def _policies():
+    return (ElasWavePolicy(hw=WORKER_HW), TorchFTPolicy(),
+            OobleckPolicy(hw=WORKER_HW))
+
+
+def _price(w: AnalyticWorkload, scn: Scenario, policy, **kw):
+    t0 = time.perf_counter()
+    res = AnalyticScenarioRunner(scn, w, policy, **kw).run()
+    wall = time.perf_counter() - t0
+    burst = next(r for r in res.recoveries if "communicator" in r)
+    acct = burst["communicator"]
+    return res, {
+        "wall_seconds": round(wall, 4),
+        "time_avg_rel_throughput": res.summary["time_avg_rel_throughput"],
+        "final_rel_throughput": res.summary["final_rel_throughput"],
+        "n_burst_ranks": len(burst["ranks"]),
+        **{k: acct[k] for k in ("edit_seconds", "partial_rebuild_seconds",
+                                "full_rebuild_seconds")},
+    }
+
+
+def _oracle_check(n_ranks: int = 32) -> bool:
+    """Whole-scenario equivalence: vectorized communicator vs the seed
+    dict/set implementation, identical recovery records and summary."""
+    w = _workload(n_ranks)
+    scn = _scenario(w)
+    ok = True
+    for policy_f in (lambda: ElasWavePolicy(hw=WORKER_HW), TorchFTPolicy,
+                     lambda: OobleckPolicy(hw=WORKER_HW)):
+        vec = AnalyticScenarioRunner(scn, w, policy_f()).run()
+        leg = AnalyticScenarioRunner(
+            scn, w, policy_f(), comm_factory=LegacyDynamicCommunicator).run()
+        ok &= vec.recoveries == leg.recoveries
+        ok &= vec.summary == leg.summary
+    return ok
+
+
+def run(verbose: bool = True):
+    max_ranks = int(os.environ.get("ANALYTIC_SCALE_MAX_RANKS", SWEEP[-1]))
+    budget = float(os.environ.get("ANALYTIC_SCALE_BUDGET_S", 10.0))
+    sweep = [n for n in SWEEP if n <= max_ranks] or [SWEEP[0]]
+    out = {"pp": PP, "domain_size": DOMAIN_SIZE, "budget_s": budget,
+           "max_ranks": sweep[-1], "sweep": {}}
+    for n in sweep:
+        w = _workload(n)
+        scn = _scenario(w)
+        out["sweep"][str(n)] = row = {}
+        for pol in _policies():
+            _, row[pol.name] = _price(w, scn, pol)
+            if verbose:
+                r = row[pol.name]
+                print(f"  ranks={n:>7d} {pol.name:<9s} "
+                      f"wall={r['wall_seconds']:7.3f}s "
+                      f"rel_thr={r['time_avg_rel_throughput']:.3f} "
+                      f"edit={r['edit_seconds']:.2f}s "
+                      f"full={r['full_rebuild_seconds']:.0f}s")
+    out["oracle_ok"] = _oracle_check()
+    worst = max(r["wall_seconds"] for r in out["sweep"][str(sweep[-1])].values())
+    out["worst_wall_seconds"] = worst
+    out["gate_ok"] = bool(out["oracle_ok"] and worst <= budget)
+    if verbose:
+        print(f"  oracle_ok={out['oracle_ok']} "
+              f"worst_wall={worst:.3f}s budget={budget:.0f}s "
+              f"gate_ok={out['gate_ok']}")
+    return out
+
+
+def main(out_path: str = "BENCH_analytic_scale.json"):
+    t0 = time.perf_counter()
+    result = run()
+    us = (time.perf_counter() - t0) * 1e6
+    Path(out_path).write_text(json.dumps(result, indent=2, sort_keys=True,
+                                         default=float) + "\n")
+    emit("analytic_scale", us,
+         f"max_ranks={result['max_ranks']};"
+         f"worst_wall={result['worst_wall_seconds']:.2f}s;"
+         f"oracle_ok={result['oracle_ok']};gate_ok={result['gate_ok']}")
+    if not result["gate_ok"]:
+        raise SystemExit(
+            f"analytic_scale gate failed: worst_wall="
+            f"{result['worst_wall_seconds']:.2f}s budget="
+            f"{result['budget_s']:.0f}s oracle_ok={result['oracle_ok']}")
+    return result
+
+
+if __name__ == "__main__":
+    main()

@@ -52,6 +52,7 @@ from repro.models.layers import RngCtx
 from repro.optim.adam import AdamConfig, adam_update_flat_np
 from . import legacy
 from .agent import Agent, Probe
+from .clusterview import GroupDelta
 from .communicator import DynamicCommunicator, build_hybrid_groups
 from .cost_model import HardwareSpec, SegmentCosts
 from .engine import RecoveryPlan, ScheduleEngine
@@ -420,6 +421,18 @@ class VirtualCluster:
             return _recovery_record()
         raise ValueError(f"unsupported elastic event kind here: {ev.kind}")
 
+    def build_view(self):
+        """The cluster's health/topology state as the shared rank-vectorized
+        ``core.clusterview.ClusterView`` (the analytic-plane currency).  The
+        view's buffers alias ``self.alive``/``self.freq``/``self.slow``, so
+        it is a live window, not a snapshot."""
+        from .clusterview import ClusterView
+        return ClusterView(self.dp0, self.pp, self.global_batch,
+                           self.num_micro, self.seq,
+                           list(self.layer_assignment),
+                           alive=self.alive, freq=self.freq, slow=self.slow,
+                           mem_cap=self.engine.mem_cap)
+
     def plan_event(self, ev: ElasticEvent) -> RecoveryPlan:
         """Mark the event's (single) rank dead and ask the ScheduleEngine for
         a joint Dataflow/Graph/DVFS/RNG RecoveryPlan (paper §4)."""
@@ -433,13 +446,9 @@ class VirtualCluster:
                 f"recovered rank")
         self.alive[d, p] = False
         old_sample_rank = self._current_sample_assignment()
-        widths = [int(self.alive[:, q].sum()) for q in range(self.pp)]
-        return self.engine.plan(
-            ev, dp=len(st.dp_ranks), pp=self.pp,
-            global_batch=self.global_batch, num_micro=self.num_micro,
-            layer_assignment=self.layer_assignment,
-            failed_dp_ranks=[d], old_sample_rank=old_sample_rank,
-            stage_widths=widths)
+        return self.engine.plan_view(
+            ev, self.build_view(), failed_dp_ranks=[d],
+            old_sample_rank=old_sample_rank, dp=len(st.dp_ranks))
 
     def recover_fail_stop(self, d: int, p: int, t_detect: float = 0.5,
                           ) -> Dict[str, float]:
@@ -459,7 +468,8 @@ class VirtualCluster:
         d, p = rank // self.pp, rank % self.pp
 
         # --- communicator: in-place edit ---
-        comm_stats = self.comm.edit(remove=[d * self.pp + p])
+        comm_stats = self.comm.apply(GroupDelta.shrink([d * self.pp + p]),
+                                     "edit")
 
         # --- live remap of stage p's optimizer state ---
         t_remap, remap_plan = self._live_remap_stage(p, failed=[d])
@@ -502,9 +512,10 @@ class VirtualCluster:
         # heartbeat/step-time tracking (clears any stale dead verdict, so a
         # rejoin that later fails again is re-detected)
         self.agent.add_rank(d * self.pp + p)
-        comm_stats = self.comm.edit(add=[(g, d * self.pp + p)
-                                         for g in self.comm.groups
-                                         if g == f"dp_stage{p}_tp0"])
+        comm_stats = self.comm.apply(
+            GroupDelta.grow([(g, d * self.pp + p)
+                             for g in self.comm.groups
+                             if g == f"dp_stage{p}_tp0"]), "edit")
         t_remap = self._widen_stage(p, joining=[d])
         self._apply_dataflow()
         rec = _recovery_record(communicator=comm_stats.seconds, remap=t_remap)

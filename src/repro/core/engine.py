@@ -18,7 +18,7 @@ from .cost_model import HardwareSpec, SegmentCosts, mini_step_time
 from .events import ElasticEvent, EventKind
 from .planners.dataflow import DataflowPlan, plan_dataflow
 from .planners.graph import GraphPlan, minimax_layer_partition
-from .planners.dvfs import DvfsPlan, plan_dvfs
+from .planners.dvfs import DvfsPlan, plan_dvfs, plan_dvfs_stages
 from .planners.rng import RngPlan, plan_rng_reshard
 
 
@@ -42,6 +42,25 @@ class ScheduleEngine:
         self.hw = hw or HardwareSpec()
         self.seg = SegmentCosts.build(cfg, seq, self.hw)
         self.mem_cap = mem_cap if mem_cap is not None else self.hw.hbm_bytes
+
+    def plan_view(self, event: ElasticEvent, view, *,
+                  failed_dp_ranks: Sequence[int],
+                  old_sample_rank: Optional[Dict[int, int]] = None,
+                  dp: Optional[int] = None,
+                  use_slow: bool = False) -> RecoveryPlan:
+        """Plan directly from a shared ``core.clusterview.ClusterView``:
+        per-stage widths and straggler factors come from the view's array
+        reductions, so callers stop re-deriving rank membership per planner.
+        ``dp`` overrides the pre-event replica count when the view's static
+        ``dp`` no longer reflects it (ranks already removed earlier)."""
+        return self.plan(
+            event, dp=dp if dp is not None else view.dp, pp=view.pp,
+            global_batch=view.global_batch, num_micro=view.num_micro,
+            layer_assignment=view.layer_assignment,
+            failed_dp_ranks=list(failed_dp_ranks),
+            old_sample_rank=old_sample_rank or {},
+            stage_widths=[int(w) for w in view.stage_width()],
+            slow=view.stage_slow() if use_slow else None)
 
     def plan(self, event: ElasticEvent, *, dp: int, pp: int,
              global_batch: int, num_micro: int,
@@ -92,18 +111,9 @@ class ScheduleEngine:
         if graph.feasible:
             times = []
             for p, (a, b) in enumerate(graph.stage_ranges):
-                s = (slow[p] if slow else 1.0)
+                s = (slow[p] if slow is not None and len(slow) else 1.0)
                 times.append(t(p, a, b) * s)
-            target = min(times)
-            for p, tt in enumerate(times):
-                if tt <= target * 1.001:
-                    continue
-
-                def obs(f, tt=tt):
-                    return tt / f
-
-                dvfs_plans.append(plan_dvfs(obs, 1.0, self.hw.max_freq, target,
-                                            eps=0.02 * target, df_min=0.01, rank=p))
+            dvfs_plans = list(plan_dvfs_stages(times, self.hw.max_freq))
 
         # --- RNG resharding ---
         new_sample_rank = _sample_assignment(df, old_sample_rank)

@@ -26,6 +26,15 @@ class DataflowPlan:
         assert abs(s - 1.0) < 1e-9, s
 
 
+def plan_dataflow_view(view, new_dp: int = None) -> DataflowPlan:
+    """View-level dataflow resize: the surviving DP width defaults to the
+    narrowest stage of the shared ``ClusterView`` (one reduction — callers
+    stop recounting rank membership)."""
+    if new_dp is None:
+        new_dp = int(view.stage_width().min())
+    return plan_dataflow(view.global_batch, view.num_micro, new_dp)
+
+
 def plan_dataflow(global_batch: int, num_micro_batches: int,
                   surviving_dp: int) -> DataflowPlan:
     """Split each micro-batch's global slice among surviving DP ranks.

@@ -36,6 +36,29 @@ def bisect_min_feasible(f_lo: float, f_hi: float,
     return hi
 
 
+def plan_dvfs_stages(stage_times, f_max: float, target: float = None,
+                     eps_frac: float = 0.02, df_min: float = 0.01,
+                     tol: float = 1.001) -> Tuple["DvfsPlan", ...]:
+    """Alg. 2 over a whole stage-time vector: up-clock every residual
+    straggler stage (time > tol * target) to the lowest aligning frequency.
+    The shared per-stage loop of ``ScheduleEngine.plan`` and
+    ``ElasWavePolicy.decide`` — stages, not ranks, so it is scale-free."""
+    times = list(stage_times)
+    if target is None:
+        target = min(times)
+    plans = []
+    for p, tt in enumerate(times):
+        if tt <= target * tol:
+            continue
+
+        def obs(f, tt=tt):
+            return tt / f
+
+        plans.append(plan_dvfs(obs, 1.0, f_max, target,
+                               eps=eps_frac * target, df_min=df_min, rank=p))
+    return tuple(plans)
+
+
 def plan_dvfs(obs_time: Callable[[float], float],
               f_cur: float, f_max: float, target: float,
               eps: float, df_min: float, rank: int = -1) -> DvfsPlan:

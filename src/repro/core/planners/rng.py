@@ -39,15 +39,25 @@ class RngPlan:
 
 
 def plan_rng_reshard(old_layer_stage: Sequence[int], new_layer_stage: Sequence[int],
-                     old_sample_rank: Dict[int, int], new_sample_rank: Dict[int, int],
-                     ) -> RngPlan:
-    layer_moves = tuple(
-        (lid, o, n) for lid, (o, n) in enumerate(zip(old_layer_stage, new_layer_stage))
-        if o != n)
-    sample_moves = tuple(
-        (sid, old_sample_rank[sid], new_sample_rank[sid])
-        for sid in sorted(new_sample_rank)
-        if sid in old_sample_rank and old_sample_rank[sid] != new_sample_rank[sid])
+                     old_sample_rank, new_sample_rank) -> RngPlan:
+    """Sample assignments may be ``{slot: rank}`` dicts (seed API) or aligned
+    int arrays over slot ids (vectorized ClusterView path) — array inputs
+    diff in one ``flatnonzero``."""
+    ols = np.asarray(old_layer_stage, dtype=np.int64)
+    nls = np.asarray(new_layer_stage, dtype=np.int64)
+    moved = np.flatnonzero(ols != nls)
+    layer_moves = tuple((int(l), int(ols[l]), int(nls[l])) for l in moved)
+    if isinstance(old_sample_rank, np.ndarray) or isinstance(new_sample_rank,
+                                                             np.ndarray):
+        osr = np.asarray(old_sample_rank, dtype=np.int64)
+        nsr = np.asarray(new_sample_rank, dtype=np.int64)
+        diff = np.flatnonzero(osr != nsr)
+        sample_moves = tuple((int(s), int(osr[s]), int(nsr[s])) for s in diff)
+    else:
+        sample_moves = tuple(
+            (sid, old_sample_rank[sid], new_sample_rank[sid])
+            for sid in sorted(new_sample_rank)
+            if sid in old_sample_rank and old_sample_rank[sid] != new_sample_rank[sid])
     nbytes = (len(layer_moves) + len(sample_moves)) * RNG_STATE_BYTES
     return RngPlan(layer_moves, sample_moves, nbytes)
 

@@ -1,8 +1,12 @@
-"""Recovery policies: ElasWave (ours) + the paper's two baselines.
+"""Recovery policies: ElasWave (ours) + three baselines.
 
-All three consume the same ClusterView and produce a ThroughputDecision the
-pipeline simulator can evaluate, so Fig. 11/12a/14 comparisons are
-apples-to-apples.
+All policies consume the same rank-vectorized :class:`ClusterView`
+(``core.clusterview`` — re-exported here for compatibility) and produce a
+Decision the pipeline simulator can evaluate, so Fig. 11/12a/14 comparisons
+are apples-to-apples.  Per-rank Python loops are replaced by stage/replica
+array reductions, so ``decide`` stays sub-second at 10^5 ranks: the only
+remaining loops run over pipeline stages (pp) or unique (freq, slow)
+configurations, never over dp.
 
 * **TorchFTPolicy** — DP-replica granularity: a failure drops the entire DP
   replica (pipeline) containing the failed rank; remaining replicas re-split
@@ -11,6 +15,10 @@ apples-to-apples.
   to same-stage peers in other DP replicas (decoupled-backward bubbles absorb
   some of it).  Creates stage stragglers when the bubble budget is exhausted
   and extends activation lifetimes (OOM risk), per paper Fig. 1.
+* **OobleckPolicy** — pipeline-template fallback (PAPERS.md): precomputed
+  minimax partitions per surviving-stage count; a damaged replica is
+  re-instantiated on its k surviving workers from template[k] instead of
+  being dropped.
 * **ElasWavePolicy** — multi-dimensional: dataflow resize (DP domain) +
   minimax layer re-partition (PP domain) + DVFS top-up.
 """
@@ -21,26 +29,12 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .clusterview import ClusterView, FailureDomainMap, GroupDelta  # noqa: F401  (re-export)
 from .cost_model import HardwareSpec, SegmentCosts, mini_step_time
 from .pipeline import StageTiming, simulate_1f1b, simulate_dp_pp
 from .planners.dataflow import plan_dataflow
 from .planners.graph import minimax_layer_partition
 from .planners.dvfs import plan_dvfs, ACHIEVABLE
-
-
-@dataclasses.dataclass
-class ClusterView:
-    """What the Agent reports to the Core."""
-    dp: int                          # replicas
-    pp: int                          # stages
-    global_batch: int
-    num_micro: int
-    seq: int
-    layer_assignment: List[Tuple[int, int]]   # per stage [a, b] inclusive
-    alive: np.ndarray                # [dp, pp] bool
-    freq: np.ndarray                 # [dp, pp] normalized frequency
-    slow: np.ndarray                 # [dp, pp] straggler multiplier (>=1)
-    mem_cap: float                   # bytes per device
 
 
 @dataclasses.dataclass
@@ -67,21 +61,28 @@ class TorchFTPolicy:
 
     def decide(self, seg: SegmentCosts, view: ClusterView) -> Decision:
         # replicas with any dead rank are dropped entirely
-        alive_reps = [d for d in range(view.dp) if view.alive[d].all()]
-        n = len(alive_reps)
+        alive_rows = view.alive.all(axis=1)                     # [dp]
+        n = int(alive_rows.sum())
         if n == 0:
             return Decision(self.name, float("inf"), False, {"alive_reps": 0})
         # global batch is re-split over the surviving replicas: same
         # micro-batch size, proportionally more micro-batches per replica.
         mbs = max(1, view.global_batch // (view.num_micro * view.dp))
         num_micro_n = -(-view.global_batch // (mbs * n))
+        fl = [seg.seg_fwd_flops(a, b, mbs) for a, b in view.layer_assignment]
+        # replicas synchronized by grad all-reduce -> step = max over
+        # replicas; identical (freq, slow) rows give identical times, so
+        # simulate each distinct configuration once (at scale: one row).
+        rows = np.concatenate([view.freq[alive_rows], view.slow[alive_rows]],
+                              axis=1)
         times = []
-        for d in alive_reps:
-            st = _stage_times(seg, view, view.layer_assignment,
-                              [mbs] * view.pp, view.freq, view.slow, d)
-            st = [StageTiming(s.fwd, s.bwd, num_micro_n) for s in st]
+        for row in np.unique(rows, axis=0):
+            f, s = row[:view.pp], row[view.pp:]
+            st = [StageTiming(
+                fl[p] / (seg.hw.peak_flops * seg.hw.mfu * f[p] / s[p]),
+                2 * fl[p] / (seg.hw.peak_flops * seg.hw.mfu * f[p] / s[p]),
+                num_micro_n) for p in range(view.pp)]
             times.append(simulate_1f1b(st).step_time)
-        # replicas synchronized by grad all-reduce
         return Decision(self.name, max(times), True,
                         {"alive_reps": n, "mbs": mbs, "num_micro": num_micro_n,
                          "wasted_ranks": int((view.alive.sum()
@@ -139,6 +140,77 @@ class ReCyclePolicy:
                         {"extra_micro": dict(extra), "oom": oom, "mbs": mbs})
 
 
+class OobleckPolicy:
+    """Oobleck-style pipeline-template fallback (PAPERS.md).
+
+    For each surviving-stage count k the policy precomputes (and caches) a
+    minimax layer partition of all L layers over k stages — the "pipeline
+    template".  A replica that lost ranks is re-instantiated on its k
+    surviving workers from template[k], so its capacity is kept (unlike
+    TorchFT, which drops the replica) at the price of a deeper-stage,
+    higher-latency pipeline.  Replicas whose template is memory-infeasible
+    are dropped; survivors re-split the global batch TorchFT-style.
+    """
+    name = "oobleck"
+
+    def __init__(self, hw: Optional[HardwareSpec] = None):
+        self.hw = hw or HardwareSpec()
+        self._templates: Dict[Tuple, object] = {}
+
+    def _template(self, seg: SegmentCosts, view: ClusterView, k: int, mbs: int):
+        key = (id(seg.cfg), view.seq, k, mbs, view.mem_cap,
+               min(k, view.num_micro))
+        plan = self._templates.get(key)
+        if plan is None:
+            L = seg.cfg.num_layers
+
+            def t(p, a, b):
+                return mini_step_time(seg, a, b, mbs, hw=self.hw)
+
+            def mem(p, a, b):
+                return seg.seg_mem(a, b, mbs,
+                                   inflight=min(k, view.num_micro), dp_size=1)
+
+            plan = minimax_layer_partition(L, k, t, mem, [view.mem_cap] * k)
+            self._templates[key] = plan
+        return plan
+
+    def decide(self, seg: SegmentCosts, view: ClusterView) -> Decision:
+        k_rep = view.replica_width()                            # [dp]
+        mbs = max(1, view.global_batch // (view.num_micro * view.dp))
+        ks = [int(k) for k in np.unique(k_rep[k_rep > 0])]
+        tmpl = {k: self._template(seg, view, k, mbs) for k in ks}
+        feasible_ks = [k for k in ks if tmpl[k].feasible]
+        live = (k_rep > 0) & np.isin(k_rep, feasible_ks)
+        n = int(live.sum())
+        if n == 0:
+            return Decision(self.name, float("inf"), False, {"alive_reps": 0})
+        num_micro_n = -(-view.global_batch // (mbs * n))
+        # each live replica runs template[k] on its survivors, slowed by its
+        # worst straggler / slowest clock; distinct (k, slow, freq) configs
+        # are simulated once (at scale: a handful).
+        rep_slow = np.where(view.alive, view.slow, 1.0).max(axis=1, initial=1.0)
+        rep_freq = np.where(view.alive, view.freq, np.inf).min(axis=1,
+                                                               initial=np.inf)
+        triples = np.stack([k_rep.astype(np.float64), rep_slow, rep_freq],
+                           axis=1)[live]
+        times = []
+        for k, s, f in np.unique(triples, axis=0):
+            ranges = tmpl[int(k)].stage_ranges
+            eff = self.hw.peak_flops * self.hw.mfu * f / s
+            st = [StageTiming(seg.seg_fwd_flops(a, b, mbs) / eff,
+                              2 * seg.seg_fwd_flops(a, b, mbs) / eff,
+                              num_micro_n) for a, b in ranges]
+            times.append(simulate_1f1b(st).step_time)
+        return Decision(self.name, max(times), True,
+                        {"alive_reps": n, "mbs": mbs, "num_micro": num_micro_n,
+                         "templates": {k: tmpl[k].layers_per_stage
+                                       for k in feasible_ks},
+                         "dropped_reps": int((k_rep > 0).sum()) - n,
+                         "wasted_ranks": int(view.alive.sum()
+                                             - k_rep[live].sum())})
+
+
 class ElasWavePolicy:
     name = "elaswave"
 
@@ -152,20 +224,19 @@ class ElasWavePolicy:
     def decide(self, seg: SegmentCosts, view: ClusterView) -> Decision:
         L = seg.cfg.num_layers
         P = view.pp
-        # per-stage surviving DP width
-        width = [int(view.alive[:, p].sum()) for p in range(P)]
+        # per-stage surviving DP width (one reduction, not a dp loop)
+        width_v = view.stage_width()
+        width = [int(w) for w in width_v]
         if min(width) == 0:
             return Decision(self.name, float("inf"), False, {"stage_lost": True})
         # 1) dataflow: per-stage micro-batch sizes (failed rank's share spread)
         per_micro = view.global_batch // view.num_micro
-        mbs_stage = [int(np.ceil(per_micro / w)) for w in width]
+        mbs_stage = [int(m) for m in np.ceil(per_micro / width_v)]
 
         # 2) graph: minimax layer re-partition under memory caps.
         # Per-stage straggler factors enter the cost (a slow stage should
         # receive FEWER layers — fail-slow mitigation via migration).
-        slow_stage = [max((view.slow[d, p] for d in range(view.dp)
-                           if view.alive[d, p]), default=1.0)
-                      for p in range(P)]
+        slow_stage = view.stage_slow()
 
         def t(p, a, b):
             return mini_step_time(seg, a, b, mbs_stage[p], hw=self.hw) \
@@ -188,9 +259,7 @@ class ElasWavePolicy:
         freq = view.freq.copy()
         base_times = []
         for p, (a, b) in enumerate(assignment):
-            worst_slow = max(view.slow[d, p] for d in range(view.dp)
-                             if view.alive[d, p])
-            eff = self.hw.peak_flops * self.hw.mfu / worst_slow
+            eff = self.hw.peak_flops * self.hw.mfu / slow_stage[p]
             fl = seg.seg_fwd_flops(a, b, mbs_stage[p])
             base_times.append(3 * fl / eff)
         target = min(base_times)
@@ -205,19 +274,17 @@ class ElasWavePolicy:
 
                 dplan = plan_dvfs(obs, 1.0, self.hw.max_freq, target,
                                   eps=0.02 * target, df_min=0.01, rank=p)
-                for d in range(view.dp):
-                    freq[d, p] = max(freq[d, p], dplan.freq)
+                freq[:, p] = np.maximum(freq[:, p], dplan.freq)
                 base_times[p] = base_times[p] / dplan.freq
                 dvfs_detail.append((p, round(dplan.freq, 3), dplan.status))
 
         # evaluate: stage p runs with its own width/mbs; replicas sync on DP
         # all-reduce — simulate one "effective" pipeline with per-stage times
+        stage_freq = np.where(view.alive, freq, 0.0).max(axis=0)
         stages = []
         for p, (a, b) in enumerate(assignment):
-            worst_slow = max(view.slow[d, p] for d in range(view.dp)
-                             if view.alive[d, p])
-            f = max(freq[d, p] for d in range(view.dp) if view.alive[d, p])
-            eff = self.hw.peak_flops * self.hw.mfu * f / worst_slow
+            eff = (self.hw.peak_flops * self.hw.mfu * stage_freq[p]
+                   / slow_stage[p])
             fl = seg.seg_fwd_flops(a, b, mbs_stage[p])
             stages.append(StageTiming(fl / eff, 2 * fl / eff, view.num_micro))
         if self.pipeline_v > 1:

@@ -11,6 +11,8 @@ Quick use::
     print(result.summary)
     result.write("artifacts/")
 """
+from repro.core.clusterview import ClusterView, FailureDomainMap, GroupDelta
+
 from .library import SCENARIOS, get_scenario
 from .metrics import MetricsCollector, ScenarioResult
 from .runner import (AnalyticScenarioRunner, ClusterScenarioRunner,
@@ -21,7 +23,8 @@ from .spec import (AnalyticWorkload, ClusterWorkload, Scenario,
 
 __all__ = [
     "AnalyticScenarioRunner", "AnalyticWorkload", "ClusterScenarioRunner",
-    "ClusterWorkload", "MetricsCollector", "SCENARIOS", "Scenario",
-    "ScenarioResult", "ServeScenarioRunner", "ServeWorkload", "get_scenario",
+    "ClusterView", "ClusterWorkload", "FailureDomainMap", "GroupDelta",
+    "MetricsCollector", "SCENARIOS", "Scenario", "ScenarioResult",
+    "ServeScenarioRunner", "ServeWorkload", "get_scenario",
     "node_shrink_cells", "run_scenario", "run_serve_scenario",
 ]

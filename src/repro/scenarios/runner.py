@@ -31,6 +31,7 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
+from repro.core.clusterview import GroupDelta
 from repro.core.communicator import DynamicCommunicator, build_hybrid_groups
 from repro.core.events import ElasticEvent, EventKind
 from repro.core.migration import MigrationSpec, migration_timing
@@ -83,7 +84,8 @@ class AnalyticScenarioRunner:
                  mttr_model: Optional[Dict[str, float]] = None,
                  zero_layout: str = "interleaved",
                  blocking_migration: bool = False,
-                 account_communicator: bool = True):
+                 account_communicator: bool = True,
+                 comm_factory=DynamicCommunicator):
         self.scenario = scenario
         self.workload = workload
         self.policy = policy
@@ -92,23 +94,25 @@ class AnalyticScenarioRunner:
         self.zero_layout = zero_layout
         self.blocking_migration = blocking_migration
         self.account_communicator = account_communicator
+        # injection point for the dict/set oracle
+        # (core.legacy_comm.LegacyDynamicCommunicator) in equivalence tests
+        self.comm_factory = comm_factory
 
     # -- data-plane accounting --------------------------------------------
     def _communicator_accounting(self, comm: DynamicCommunicator,
                                  ev: ElasticEvent) -> Dict[str, float]:
-        """Price the three recovery modes from identical pre-event state,
-        then commit the in-place edit (ElasWave's choice) to ``comm``."""
+        """Price the three recovery modes from identical pre-event state
+        (``price`` is pure — no clones), then commit the in-place edit
+        (ElasWave's choice) to ``comm``."""
         removed = list(ev.ranks)
         if ev.is_grow:
-            adds = [(f"dp_stage{r % self.workload.pp}_tp0", r)
-                    for r in removed]
-            return {"edit_seconds": comm.edit(add=adds).seconds}
-        part = comm.clone().partial_rebuild(remove=removed).seconds
-        fullc = comm.clone()
-        new_groups = {k: [r for r in v if r not in set(removed)]
-                      for k, v in fullc.groups.items()}
-        full = fullc.full_rebuild(new_groups).seconds
-        edit = comm.edit(remove=removed).seconds
+            delta = GroupDelta.grow(
+                [(f"dp_stage{r % self.workload.pp}_tp0", r) for r in removed])
+            return {"edit_seconds": comm.apply(delta, "edit").seconds}
+        delta = GroupDelta.shrink(removed)
+        part = comm.price(delta, "partial_rebuild").seconds
+        full = comm.price(delta, "full_rebuild").seconds
+        edit = comm.apply(delta, "edit").seconds
         return {"edit_seconds": edit, "partial_rebuild_seconds": part,
                 "full_rebuild_seconds": full}
 
@@ -133,11 +137,9 @@ class AnalyticScenarioRunner:
                 "n_layers": len(ev.layers)}
 
     # -- main loop ---------------------------------------------------------
-    def _decide(self, seg, alive, slow, freq):
-        view = self.workload.build_view(seg, alive.copy(), slow.copy())
-        view.freq = freq.copy()
+    def _decide(self, seg, view):
         t0 = time.perf_counter()
-        d = self.policy.decide(seg, view)
+        d = self.policy.decide(seg, view.copy())
         wall = time.perf_counter() - t0
         thr = (self.workload.global_batch / d.step_time
                if d.feasible and np.isfinite(d.step_time) else 0.0)
@@ -147,10 +149,10 @@ class AnalyticScenarioRunner:
         w = self.workload
         m = MetricsCollector()
         seg = w.build_seg()
-        alive = np.ones((w.dp, w.pp), dtype=bool)
-        slow = np.ones((w.dp, w.pp))
-        freq = np.ones((w.dp, w.pp))
-        comm = DynamicCommunicator(build_hybrid_groups(w.dp, w.pp))
+        # one persistent rank-vectorized view; every burst is applied as a
+        # single fancy-indexed array op (no per-rank dict surgery)
+        view = w.build_view(seg)
+        comm = self.comm_factory(build_hybrid_groups(w.dp, w.pp))
 
         ref = self.reference_policy or self.policy
         base = ref.decide(seg, w.build_view(seg))
@@ -170,16 +172,7 @@ class AnalyticScenarioRunner:
                             "total": mig["stall_seconds"]}
                     extra["migration"] = mig
                 else:
-                    for r in ev.ranks:
-                        d_, p_ = r // w.pp, r % w.pp
-                        if ev.kind == EventKind.FAIL_SLOW:
-                            slow[d_, p_] = max(slow[d_, p_], ev.slow_factor)
-                        elif ev.kind == EventKind.DVFS_SET:
-                            freq[d_, p_] = ev.freq
-                        elif ev.is_grow:
-                            alive[d_, p_] = True
-                        else:
-                            alive[d_, p_] = False
+                    view.apply_elastic(ev)
                     if self.account_communicator and (ev.is_shrink or ev.is_grow):
                         comm_acct = self._communicator_accounting(comm, ev)
                         extra["communicator"] = comm_acct
@@ -193,7 +186,7 @@ class AnalyticScenarioRunner:
                     else:
                         mttr["total"] = sum(mttr.values())
                 m.record_recovery(t, ev, mttr, **extra)
-            decision, thr, wall = self._decide(seg, alive, slow, freq)
+            decision, thr, wall = self._decide(seg, view)
             end = boundaries[i + 1] if i + 1 < len(boundaries) else \
                 self.scenario.horizon
             dur = end - t

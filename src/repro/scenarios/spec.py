@@ -65,7 +65,12 @@ class ClusterWorkload:
 
 @dataclasses.dataclass(frozen=True)
 class AnalyticWorkload:
-    """A paper-scale workload evaluated through policies + cost models."""
+    """A paper-scale workload evaluated through policies + cost models.
+
+    ``domain_size`` (ranks per rack/pod) activates correlated failure
+    domains: the built views carry a
+    :class:`~repro.core.clusterview.FailureDomainMap` and at-scale scenarios
+    can sample whole domains (``Scenario.domain_burst``)."""
     cfg: ModelConfig
     dp: int
     pp: int
@@ -74,10 +79,18 @@ class AnalyticWorkload:
     seq: int
     hw: HardwareSpec
     mem_cap: Optional[float] = None
+    domain_size: Optional[int] = None
 
     @property
     def num_micro(self) -> int:
         return self.global_batch // (self.mbs * self.dp)
+
+    @property
+    def domains(self):
+        if self.domain_size is None:
+            return None
+        from repro.core.clusterview import FailureDomainMap
+        return FailureDomainMap(self.dp * self.pp, self.domain_size)
 
     def rank(self, d: int, p: int) -> int:
         return d * self.pp + p
@@ -103,12 +116,15 @@ class AnalyticWorkload:
             freq=np.ones((self.dp, self.pp)),
             slow=slow if slow is not None else np.ones((self.dp, self.pp)),
             mem_cap=self.mem_cap if self.mem_cap is not None
-            else self.hw.hbm_bytes)
+            else self.hw.hbm_bytes,
+            domains=self.domains)
 
     def describe(self) -> Dict:
         return {"model": self.cfg.name, "dp": self.dp, "pp": self.pp,
                 "mbs": self.mbs, "global_batch": self.global_batch,
-                "seq": self.seq}
+                "seq": self.seq,
+                **({"domain_size": self.domain_size}
+                   if self.domain_size is not None else {})}
 
 
 def node_shrink_cells(n_nodes: int, dp: int, pp: int) -> List[Tuple[int, int]]:
@@ -188,6 +204,25 @@ class Scenario:
                                     freq=freq))
         return Scenario(name, tuple(evs), horizon,
                         description="cascading fail-slow with DVFS absorption")
+
+    @staticmethod
+    def domain_burst(name: str, step: int, domain_ids: Sequence[int],
+                     domains, horizon: int,
+                     kind: EventKind = EventKind.FAIL_STOP,
+                     regrow_step: Optional[int] = None) -> "Scenario":
+        """Correlated failure-domain burst: every rank of the given rack/pod
+        domains (a :class:`~repro.core.clusterview.FailureDomainMap`) fails
+        at once — the at-scale shape i.i.d. rank sampling never produces.
+        ``regrow_step`` optionally rejoins the whole block later."""
+        ranks = tuple(int(r) for r in domains.ranks_of(list(domain_ids)))
+        evs: List[ElasticEvent] = [
+            burst(kind, step, ranks,
+                  detail=f"domains {sorted(set(domain_ids))} down")]
+        if regrow_step is not None:
+            evs.append(burst(EventKind.SCALE_OUT, regrow_step, ranks,
+                             detail="domain rejoin"))
+        return Scenario(name, tuple(evs), horizon,
+                        description="correlated rack/pod domain burst")
 
     @staticmethod
     def shrink_regrow(name: str, rank: int, fail_step: int, rejoin_step: int,

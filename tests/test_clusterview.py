@@ -1,0 +1,218 @@
+"""Rank-vectorized ClusterView + stage-vector cost model (ISSUE 7 tentpole).
+
+Covers: zero-copy 2-D/flat buffer aliasing, vectorized reductions vs their
+per-rank loop definitions, burst application vs per-cell dict surgery,
+correlated failure domains, and the ``*_vec`` cost-model entry points
+matching the scalar seed path element-for-element.
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:   # container lacks hypothesis -> deterministic stub
+    from _hypothesis_stub import given, settings, strategies as st
+
+from repro.core.clusterview import ClusterView, FailureDomainMap, rank_coords
+from repro.core.cost_model import (HardwareSpec, SegmentCosts, mini_step_time,
+                                   mini_step_time_vec)
+from repro.core.events import ElasticEvent, EventKind, burst
+from repro.models import registry as R
+
+
+def _view(dp=4, pp=3, **kw):
+    L = 2 * pp
+    ranges = [(2 * p, 2 * p + 1) for p in range(pp)]
+    return ClusterView(dp, pp, global_batch=2 * dp, num_micro=2, seq=32,
+                       layer_assignment=ranges, **kw)
+
+
+class TestBuffers:
+    def test_flat_and_2d_alias(self):
+        v = _view()
+        v.alive[1, 2] = False
+        assert not v.rank_alive[1 * v.pp + 2]
+        v.rank_slow[5] = 3.0
+        assert v.slow[5 // v.pp, 5 % v.pp] == 3.0
+
+    def test_caller_buffer_aliased(self):
+        alive = np.ones((4, 3), dtype=bool)
+        v = _view(alive=alive)
+        v.rank_alive[0] = False
+        assert not alive[0, 0]
+
+    def test_rank_coords(self):
+        rd, rs = rank_coords(4, 3)
+        for r in range(12):
+            assert rd[r] == r // 3 and rs[r] == r % 3
+        with pytest.raises(ValueError):
+            rd[0] = 5          # memoized tables are read-only
+
+    def test_copy_independent(self):
+        v = _view()
+        c = v.copy()
+        c.rank_alive[0] = False
+        assert v.rank_alive[0]
+
+
+class TestReductions:
+    @settings(max_examples=10)
+    @given(st.integers(2, 6), st.integers(2, 5), st.integers(0, 10**6))
+    def test_reductions_match_loops(self, dp, pp, seed):
+        rng = np.random.default_rng(seed)
+        v = _view(dp, pp,
+                  alive=rng.random((dp, pp)) > 0.3,
+                  slow=1.0 + 2.0 * rng.random((dp, pp)),
+                  freq=0.8 + 0.4 * rng.random((dp, pp)))
+        assert list(v.stage_width()) == \
+            [sum(bool(v.alive[d, p]) for d in range(dp)) for p in range(pp)]
+        assert list(v.replica_width()) == \
+            [sum(bool(v.alive[d, p]) for p in range(pp)) for d in range(dp)]
+        assert list(v.stage_slow()) == pytest.approx(
+            [max((v.slow[d, p] for d in range(dp) if v.alive[d, p]),
+                 default=1.0) for p in range(pp)], abs=0)
+        assert list(v.stage_freq()) == pytest.approx(
+            [max((v.freq[d, p] for d in range(dp) if v.alive[d, p]),
+                 default=1.0) for p in range(pp)], abs=0)
+        assert v.alive_count() == int(v.alive.sum())
+        assert set(v.dead_ranks().tolist()) == \
+            {r for r in range(dp * pp) if not v.rank_alive[r]}
+
+    def test_apply_elastic_matches_cell_surgery(self):
+        v1, v2 = _view(), _view()
+        events = [
+            burst(EventKind.FAIL_SLOW, 0, (1, 4, 7), slow_factor=2.5),
+            burst(EventKind.DVFS_SET, 1, (4, 5), freq=1.1),
+            burst(EventKind.FAIL_STOP, 2, (0, 3, 6)),
+            burst(EventKind.SCALE_OUT, 3, (3,)),
+        ]
+        for ev in events:
+            v1.apply_elastic(ev)
+            for r in ev.ranks:       # the seed runner's per-cell surgery
+                d, p = r // v2.pp, r % v2.pp
+                if ev.kind == EventKind.FAIL_SLOW:
+                    v2.slow[d, p] = max(v2.slow[d, p], ev.slow_factor)
+                elif ev.kind == EventKind.DVFS_SET:
+                    v2.freq[d, p] = ev.freq
+                elif ev.is_grow:
+                    v2.alive[d, p] = True
+                else:
+                    v2.alive[d, p] = False
+        assert np.array_equal(v1.rank_alive, v2.rank_alive)
+        assert np.array_equal(v1.rank_slow, v2.rank_slow)
+        assert np.array_equal(v1.rank_freq, v2.rank_freq)
+
+
+class TestFailureDomains:
+    def test_domain_roundtrip(self):
+        m = FailureDomainMap(n_ranks=100, domain_size=8)
+        assert m.n_domains == 13
+        assert list(m.domain_of([0, 7, 8, 99])) == [0, 0, 1, 12]
+        assert list(m.ranks_of([12])) == [96, 97, 98, 99]   # clipped tail
+        assert list(m.ranks_of([1, 0, 1])) == list(range(16))  # dedup+sort
+
+    def test_sample_deterministic_distinct(self):
+        m = FailureDomainMap(n_ranks=10_000, domain_size=16)
+        a, b = m.sample(5, seed=3), m.sample(5, seed=3)
+        assert np.array_equal(a, b)
+        assert len(set(a.tolist())) == 5
+        assert len(m.sample(10**9, seed=0)) == m.n_domains  # capped
+
+    def test_workload_carries_domains(self):
+        from repro.core.cost_model import HardwareSpec
+        from repro.scenarios import AnalyticWorkload
+        w = AnalyticWorkload(cfg=R.tiny_config("dense", num_layers=4),
+                             dp=8, pp=2, mbs=1, global_batch=16,
+                             seq=32, hw=HardwareSpec(), domain_size=4)
+        seg = w.build_seg()
+        v = w.build_view(seg)
+        assert v.domains.n_domains == 4
+        assert list(v.rank_domain[:5]) == [0, 0, 0, 0, 1]
+
+
+class TestVecCostModel:
+    def setup_method(self):
+        self.hw = HardwareSpec()
+        self.seg = SegmentCosts.build(R.tiny_config("dense", num_layers=12),
+                                      64, self.hw)
+
+    def test_seg_fwd_flops_vec_bitwise(self):
+        segs = [(0, 3), (4, 7), (8, 11), (2, 9)]
+        a = np.array([s[0] for s in segs])
+        b = np.array([s[1] for s in segs])
+        for mbs in (1, 3):
+            vec = self.seg.seg_fwd_flops_vec(a, b, mbs)
+            for i, (x, y) in enumerate(segs):
+                assert vec[i] == self.seg.seg_fwd_flops(x, y, mbs)
+
+    def test_mini_step_time_vec_bitwise(self):
+        segs = [(0, 3), (4, 7), (8, 11)]
+        a = np.array([s[0] for s in segs])
+        b = np.array([s[1] for s in segs])
+        mbs = np.array([1, 2, 4])
+        freq = np.array([1.0, 1.1, 0.9])
+        vec = mini_step_time_vec(self.seg, a, b, mbs, freq=freq, hw=self.hw)
+        for i, (x, y) in enumerate(segs):
+            assert vec[i] == mini_step_time(self.seg, x, y, int(mbs[i]),
+                                            freq=float(freq[i]), hw=self.hw)
+
+    def test_seg_mem_vec_close(self):
+        # activation term is count*footprint vs repeated addition -> ULP-level
+        a = np.array([0, 4])
+        b = np.array([3, 11])
+        vec = self.seg.seg_mem_vec(a, b, 2, inflight=3, dp_size=4)
+        for i in range(2):
+            ref = self.seg.seg_mem(int(a[i]), int(b[i]), 2, 3, 4)
+            assert vec[i] == pytest.approx(ref, rel=1e-12)
+
+    def test_pre_memoized(self):
+        c1 = self.seg._pre(self.seg.fwd_flops)
+        c2 = self.seg._pre(self.seg.fwd_flops)
+        assert c1 is c2
+
+
+class TestPolicyParity:
+    """The vectorized policies must reproduce the per-rank-loop decisions."""
+
+    @settings(max_examples=6)
+    @given(st.integers(2, 5), st.integers(2, 4), st.integers(0, 10**6))
+    def test_decisions_deterministic_under_views(self, dp, pp, seed):
+        from repro.core.policies import (ElasWavePolicy, OobleckPolicy,
+                                         TorchFTPolicy)
+        from repro.scenarios import AnalyticWorkload
+        rng = np.random.default_rng(seed)
+        hw = HardwareSpec()
+        w = AnalyticWorkload(cfg=R.tiny_config("dense", num_layers=2 * pp),
+                             dp=dp, pp=pp, mbs=1, global_batch=2 * dp,
+                             seq=64, hw=hw)
+        seg = w.build_seg()
+        alive = rng.random((dp, pp)) > 0.25
+        slow = np.where(rng.random((dp, pp)) > 0.7, 2.0, 1.0)
+        for pol in (ElasWavePolicy(hw=hw), TorchFTPolicy(),
+                    OobleckPolicy(hw=hw)):
+            d1 = pol.decide(seg, w.build_view(seg, alive.copy(), slow.copy()))
+            d2 = pol.decide(seg, w.build_view(seg, alive.copy(), slow.copy()))
+            assert d1.step_time == d2.step_time
+            assert d1.feasible == d2.feasible
+
+    def test_oobleck_keeps_partial_replicas(self):
+        """A replica that lost one stage is kept via template fallback
+        (TorchFT would drop it)."""
+        from repro.core.policies import OobleckPolicy, TorchFTPolicy
+        from repro.scenarios import AnalyticWorkload
+        hw = HardwareSpec()
+        w = AnalyticWorkload(cfg=R.tiny_config("dense", num_layers=8),
+                             dp=4, pp=4, mbs=1, global_batch=8, seq=64, hw=hw)
+        seg = w.build_seg()
+        alive = np.ones((4, 4), dtype=bool)
+        alive[0, 1] = False                     # replica 0 loses one stage
+        ob = OobleckPolicy(hw=hw).decide(seg, w.build_view(seg, alive.copy()))
+        tf = TorchFTPolicy().decide(seg, w.build_view(seg, alive.copy()))
+        assert ob.feasible and tf.feasible
+        assert ob.detail["alive_reps"] == 4     # template keeps replica 0
+        assert tf.detail["alive_reps"] == 3
+        assert ob.detail["wasted_ranks"] == 0
+        assert tf.detail["wasted_ranks"] == 3
+        # the damaged replica runs a 3-stage template over all 8 layers
+        assert tuple(ob.detail["templates"][3]) and \
+            sum(ob.detail["templates"][3]) == 8

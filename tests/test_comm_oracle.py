@@ -1,0 +1,160 @@
+"""Vectorized-vs-dict communicator oracle (ISSUE 7 equivalence contract).
+
+``core.communicator.DynamicCommunicator`` (int64 link codes, memoized CSR
+group tables) must be observationally identical to the preserved seed
+implementation ``core.legacy_comm.LegacyDynamicCommunicator`` at small scale:
+same ``OpStats`` (counts AND seconds), same group tables, same link sets,
+same ``affected_groups``, and same end-to-end MTTR accounting through
+``AnalyticScenarioRunner`` — across random hybrid layouts, random burst
+sizes, and all three recovery policies, at dp x pp x tp <= 64 ranks.
+"""
+import random
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:   # container lacks hypothesis -> deterministic stub
+    from _hypothesis_stub import given, settings, strategies as st
+
+from repro.core.clusterview import GroupDelta
+from repro.core.events import EventKind, burst as make_burst
+from repro.core.communicator import (DynamicCommunicator, OpStats,
+                                     build_hybrid_groups)
+from repro.core.legacy_comm import LegacyDynamicCommunicator
+
+LAYOUTS = [(2, 2, 1), (4, 2, 1), (2, 4, 2), (4, 4, 2), (8, 4, 2), (4, 4, 4),
+           (3, 3, 1), (2, 8, 4)]
+POLICIES = ("edit", "partial_rebuild", "full_rebuild")
+
+
+def _stats_tuple(s: OpStats):
+    return (s.mode, s.links_created, s.links_reused, s.links_destroyed,
+            s.ranks_touched, s.seconds)
+
+
+def _random_trace(dp, pp, tp, seed, steps=4):
+    """A deterministic random burst trace over the layout's rank space."""
+    rng = random.Random(seed)
+    n = dp * pp * tp
+    trace = []
+    for _ in range(steps):
+        k = rng.randint(1, max(1, n // 4))
+        rem = tuple(sorted(rng.sample(range(n), k)))
+        n_add = rng.randint(0, len(rem))
+        adds = tuple((f"dp_stage{(r // tp) % pp}_tp{r % tp}", r)
+                     for r in rem[:n_add])
+        trace.append((GroupDelta(remove=rem, add=adds),
+                      rng.choice(POLICIES)))
+    return trace
+
+
+class TestOpStatsOracle:
+    @settings(max_examples=20)
+    @given(st.sampled_from(LAYOUTS), st.integers(0, 10**6))
+    def test_apply_matches_legacy(self, layout, seed):
+        dp, pp, tp = layout
+        g = build_hybrid_groups(dp, pp, tp)
+        vec, leg = DynamicCommunicator(g), LegacyDynamicCommunicator(g)
+        assert vec.links == leg.links
+        assert vec.all_ranks() == leg.all_ranks()
+        for delta, policy in _random_trace(dp, pp, tp, seed):
+            pv = vec.price(delta, policy)
+            pl = leg.price(delta, policy)
+            assert _stats_tuple(pv) == _stats_tuple(pl)
+            sv = vec.apply(delta, policy)
+            sl = leg.apply(delta, policy)
+            assert _stats_tuple(sv) == _stats_tuple(sl)
+            assert _stats_tuple(pv) == _stats_tuple(sv)  # price == commit
+            assert vec.groups == leg.groups
+            assert vec.links == leg.links
+
+    @settings(max_examples=10)
+    @given(st.sampled_from(LAYOUTS), st.integers(0, 10**6))
+    def test_affected_groups_identical(self, layout, seed):
+        dp, pp, tp = layout
+        g = build_hybrid_groups(dp, pp, tp)
+        vec, leg = DynamicCommunicator(g), LegacyDynamicCommunicator(g)
+        rng = random.Random(seed)
+        n = dp * pp * tp
+        for _ in range(5):
+            ranks = rng.sample(range(n), rng.randint(1, max(1, n // 3)))
+            assert vec.affected_groups(ranks) == leg.affected_groups(ranks)
+        assert vec.affected_groups([]) == leg.affected_groups([]) == []
+
+    def test_price_does_not_mutate(self):
+        g = build_hybrid_groups(4, 4, 2)
+        vec = DynamicCommunicator(g)
+        before_groups = {k: list(v) for k, v in vec.groups.items()}
+        before_links = vec.links
+        for policy in POLICIES:
+            vec.price(GroupDelta.shrink([0, 5, 9]), policy)
+        assert vec.groups == before_groups
+        assert vec.links == before_links
+        assert vec.history == []
+
+    def test_deprecated_shims_delegate(self):
+        g = build_hybrid_groups(4, 2)
+        vec, ref = DynamicCommunicator(g), DynamicCommunicator(g)
+        with pytest.warns(DeprecationWarning):
+            st_old = vec.edit(remove=[3])
+        st_new = ref.apply(GroupDelta.shrink([3]), "edit")
+        assert _stats_tuple(st_old) == _stats_tuple(st_new)
+        assert len(vec.history) == 1
+        with pytest.warns(DeprecationWarning):
+            vec.partial_rebuild(remove=[4])
+        with pytest.warns(DeprecationWarning):
+            vec.full_rebuild({k: list(v) for k, v in vec.groups.items()})
+        assert [h.mode for h in vec.history] == \
+            ["edit", "partial_rebuild", "full_rebuild"]
+
+    def test_ring_cache_invalidation(self):
+        """Satellite: memoized per-group ring codes must be dropped for
+        edited groups and reused (same object) for untouched ones."""
+        g = build_hybrid_groups(4, 4)
+        vec = DynamicCommunicator(g)
+        vec.affected_groups([0])                      # warm CSR
+        c_before = vec._codes("dp_stage0_tp0")
+        untouched = vec._codes("dp_stage3_tp0")
+        vec.apply(GroupDelta.shrink([0]), "edit")     # rank 0 is stage 0
+        assert vec._codes("dp_stage3_tp0") is untouched
+        c_after = vec._codes("dp_stage0_tp0")
+        assert not np.array_equal(c_before, c_after)
+
+
+class TestMttrOracle:
+    @settings(max_examples=6)
+    @given(st.sampled_from([(2, 2), (4, 2), (4, 4), (8, 8)]),
+           st.integers(0, 10**6))
+    def test_runner_accounting_identical(self, shape, seed):
+        """End-to-end MTTR accounting: the analytic runner with the
+        vectorized communicator produces byte-identical recovery records and
+        summaries to the legacy dict/set communicator."""
+        from repro.core.cost_model import HardwareSpec
+        from repro.core.policies import ElasWavePolicy
+        from repro.models import registry as R
+        from repro.scenarios import (AnalyticScenarioRunner, AnalyticWorkload,
+                                     Scenario)
+        dp, pp = shape
+        rng = random.Random(seed)
+        hw = HardwareSpec()
+        w = AnalyticWorkload(cfg=R.tiny_config("dense", num_layers=2 * pp),
+                             dp=dp, pp=pp, mbs=1, global_batch=2 * dp,
+                             seq=64, hw=hw)
+        # burst killing one random replica-worth of ranks, then regrow
+        dead = tuple(sorted(rng.sample(range(dp * pp),
+                                       rng.randint(1, max(1, pp // 2)))))
+        scn = Scenario("oracle", (
+            make_burst(EventKind.FAIL_STOP, 2, dead),
+            make_burst(EventKind.SCALE_OUT, 6, dead)), 10)
+        vec = AnalyticScenarioRunner(scn, w, ElasWavePolicy(hw=hw)).run()
+        leg = AnalyticScenarioRunner(
+            scn, w, ElasWavePolicy(hw=hw),
+            comm_factory=LegacyDynamicCommunicator).run()
+        assert vec.recoveries == leg.recoveries
+        assert vec.summary == leg.summary
+        assert [{k: v for k, v in s.items() if k != "decide_wall_seconds"}
+                for s in vec.steps] == \
+               [{k: v for k, v in s.items() if k != "decide_wall_seconds"}
+                for s in leg.steps]
