@@ -13,18 +13,23 @@ Quick use::
 """
 from repro.core.clusterview import ClusterView, FailureDomainMap, GroupDelta
 
+from .fuzz import (FuzzCase, POLICY_NAMES, make_analytic_case, make_case,
+                   make_cluster_case, make_policy, run_case, shrink_case,
+                   trace_is_legal)
 from .library import SCENARIOS, get_scenario
 from .metrics import MetricsCollector, ScenarioResult
 from .runner import (AnalyticScenarioRunner, ClusterScenarioRunner,
                      run_scenario)
 from .serve import ServeScenarioRunner, ServeWorkload, run_serve_scenario
 from .spec import (AnalyticWorkload, ClusterWorkload, Scenario,
-                   node_shrink_cells)
+                   node_shrink_cells, validate_event_legality)
 
 __all__ = [
     "AnalyticScenarioRunner", "AnalyticWorkload", "ClusterScenarioRunner",
-    "ClusterView", "ClusterWorkload", "FailureDomainMap", "GroupDelta",
-    "MetricsCollector", "SCENARIOS", "Scenario", "ScenarioResult",
-    "ServeScenarioRunner", "ServeWorkload", "get_scenario",
-    "node_shrink_cells", "run_scenario", "run_serve_scenario",
+    "ClusterView", "ClusterWorkload", "FailureDomainMap", "FuzzCase",
+    "GroupDelta", "MetricsCollector", "POLICY_NAMES", "SCENARIOS", "Scenario",
+    "ScenarioResult", "ServeScenarioRunner", "ServeWorkload", "get_scenario",
+    "make_analytic_case", "make_case", "make_cluster_case", "make_policy",
+    "node_shrink_cells", "run_case", "run_scenario", "run_serve_scenario",
+    "shrink_case", "trace_is_legal", "validate_event_legality",
 ]

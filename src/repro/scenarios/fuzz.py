@@ -1,0 +1,423 @@
+"""Seeded generator of *legal* adversarial elastic traces (the fuzzer).
+
+The paper's claim is universally quantified — *every* legal elastic event
+sequence preserves the four guarantees (§4) — so hand-picked scenario
+builders can never close the argument.  This module draws random traces from
+composable :class:`EventStrategy` combinators (fail-stop bursts, correlated
+domain bursts, rejoins, cascading fail-slow, DVFS setpoints, directed
+migrations, shrink-regrow interleavings) over randomized workload shapes
+(dp x pp x model family), constrained to stay *legal*:
+
+* never kill a stage's last surviving replica (training would be
+  unrecoverable — that is outside the paper's claim);
+* rejoin (SCALE_OUT) only currently-dead ranks, shrink only live ranks,
+  no duplicate ranks within one burst (``spec.validate_event_legality``);
+* bounded concurrent events per step and per trace.
+
+Everything is derived from a single integer seed: ``make_analytic_case(s)``
+/ ``make_cluster_case(s)`` rebuild the exact workload + trace, so a CI
+failure is reproducible with one command (``FuzzCase.repro()``).
+``run_case`` attaches the invariant checkers from ``core.invariants`` and
+decorates any violation with that command; ``shrink_case`` greedily deletes
+events (re-checking legality) to hand back a minimal failing trace.
+"""
+from __future__ import annotations
+
+import dataclasses
+import random
+from typing import Callable, List, Optional, Sequence, Tuple
+
+from repro.core.cost_model import HardwareSpec
+from repro.core.events import ElasticEvent, EventKind, burst
+from repro.core.invariants import (InvariantViolation,
+                                   default_analytic_checkers,
+                                   default_cluster_checkers)
+
+from .spec import (AnalyticWorkload, ClusterWorkload, Scenario,
+                   validate_event_legality)
+
+
+# ---------------------------------------------------------------------------
+# trace state + legality
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class TraceState:
+    """Liveness bookkeeping threaded through the strategies while a trace is
+    being drawn.  ``reserved`` ranks have a scheduled future rejoin and may
+    not be touched by any other strategy; a dead rank stays counted as dead
+    here even past its rejoin step (conservative: the generator under-counts
+    widths, so the never-kill-the-last-replica rule can only over-hold)."""
+    dp: int
+    pp: int
+    horizon: int
+    dead: set = dataclasses.field(default_factory=set)
+    reserved: set = dataclasses.field(default_factory=set)
+
+    def stage_of(self, rank: int) -> int:
+        return rank % self.pp
+
+    def width(self, p: int) -> int:
+        return self.dp - sum(1 for r in self.dead if r % self.pp == p)
+
+    def live_ranks(self) -> List[int]:
+        return [r for r in range(self.dp * self.pp)
+                if r not in self.dead and r not in self.reserved]
+
+    def killable(self, extra_dead: set = frozenset()) -> List[int]:
+        """Live, unreserved ranks whose removal keeps their stage >= 1 wide
+        (``extra_dead``: ranks already picked for the same burst)."""
+        out = []
+        for r in self.live_ranks():
+            if r in extra_dead:
+                continue
+            p = self.stage_of(r)
+            w = self.width(p) - sum(1 for x in extra_dead if x % self.pp == p)
+            if w >= 2:
+                out.append(r)
+        return out
+
+
+def trace_is_legal(events: Sequence[ElasticEvent], dp: int, pp: int) -> bool:
+    """Predicate form of trace legality (used by the shrinker, which must not
+    raise): event-sequence rules from ``validate_event_legality`` plus the
+    grid rules — ranks inside the dp x pp grid and every stage keeps >= 1
+    live replica after every liveness event."""
+    evs = sorted(events, key=lambda e: e.step)
+    try:
+        validate_event_legality(evs, "candidate")
+    except ValueError:
+        return False
+    width = [dp] * pp
+    for e in evs:
+        if any(r >= dp * pp for r in e.ranks):
+            return False
+        if e.is_shrink:
+            for r in e.ranks:
+                width[r % pp] -= 1
+            if min(width) < 1:
+                return False
+        elif e.is_grow:
+            for r in e.ranks:
+                width[r % pp] += 1
+    return True
+
+
+# ---------------------------------------------------------------------------
+# strategy combinators
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class EventStrategy:
+    """One adversarial move: ``fn(rnd, state, step)`` either emits a list of
+    legal events (mutating ``state``'s liveness books) or returns ``None``
+    when inapplicable at this point of the trace."""
+    name: str
+    fn: Callable[[random.Random, TraceState, int],
+                 Optional[List[ElasticEvent]]]
+    weight: float = 1.0
+
+
+def failstop_burst(max_ranks: int = 3) -> EventStrategy:
+    """Concurrent multi-rank failure; 30% of draws arrive as scheduler
+    SCALE_IN preemptions instead of FAIL_STOPs (same liveness effect)."""
+    def fn(rnd, st, step):
+        picked: set = set()
+        for _ in range(rnd.randint(1, max_ranks)):
+            pool = st.killable(picked)
+            if not pool:
+                break
+            picked.add(rnd.choice(pool))
+        if not picked:
+            return None
+        st.dead |= picked
+        kind = EventKind.SCALE_IN if rnd.random() < 0.3 else EventKind.FAIL_STOP
+        return [burst(kind, step, tuple(picked))]
+    return EventStrategy("failstop_burst", fn, weight=2.0)
+
+
+def rejoin(max_ranks: int = 4) -> EventStrategy:
+    """SCALE_OUT of a random subset of the currently-dead ranks."""
+    def fn(rnd, st, step):
+        pool = sorted(st.dead - st.reserved)
+        if not pool:
+            return None
+        k = rnd.randint(1, min(max_ranks, len(pool)))
+        picked = rnd.sample(pool, k)
+        st.dead -= set(picked)
+        return [burst(EventKind.SCALE_OUT, step, tuple(picked))]
+    return EventStrategy("rejoin", fn)
+
+
+def fail_slow(factors: Tuple[float, ...] = (1.5, 2.0, 3.0)) -> EventStrategy:
+    """A live rank starts straggling (repeats on the same rank are legal —
+    that is the cascading-degradation shape)."""
+    def fn(rnd, st, step):
+        pool = st.live_ranks()
+        if not pool:
+            return None
+        return [ElasticEvent(EventKind.FAIL_SLOW, step, (rnd.choice(pool),),
+                             slow_factor=rnd.choice(factors))]
+    return EventStrategy("fail_slow", fn)
+
+
+def dvfs_set(freqs: Tuple[float, ...] = (1.0, 1.05, 1.1, 1.178)
+             ) -> EventStrategy:
+    """Frequency setpoint on a random subset of live ranks (straggler
+    absorption / power capping)."""
+    def fn(rnd, st, step):
+        pool = st.live_ranks()
+        if not pool:
+            return None
+        picked = rnd.sample(pool, rnd.randint(1, min(3, len(pool))))
+        return [burst(EventKind.DVFS_SET, step, tuple(picked),
+                      freq=rnd.choice(freqs))]
+    return EventStrategy("dvfs_set", fn)
+
+
+def shrink_regrow(max_gap: int = 3) -> EventStrategy:
+    """Kill one rank now and schedule its rejoin a few steps later; the rank
+    is *reserved* so no other strategy touches it in between (the
+    interleaving shape that historically broke naive liveness tracking)."""
+    def fn(rnd, st, step):
+        if step >= st.horizon - 1:
+            return None                       # no room for the rejoin
+        pool = st.killable()
+        if not pool:
+            return None
+        r = rnd.choice(pool)
+        back = min(step + rnd.randint(1, max_gap), st.horizon - 1)
+        st.dead.add(r)
+        st.reserved.add(r)
+        return [ElasticEvent(EventKind.SCALE_IN, step, (r,)),
+                ElasticEvent(EventKind.SCALE_OUT, back, (r,))]
+    return EventStrategy("shrink_regrow", fn)
+
+
+def migrate(num_layers: int, pp: int) -> EventStrategy:
+    """Directed layer migration between two distinct stages (analytic-only:
+    the numeric executor treats MIGRATE as a planner-internal action)."""
+    def fn(rnd, st, step):
+        if pp < 2:
+            return None
+        src = rnd.randrange(pp)
+        dst = rnd.choice([p for p in range(pp) if p != src])
+        per, rem = num_layers // pp, num_layers % pp
+        lo = src * per + min(src, rem)
+        n = per + (1 if src < rem else 0)
+        layers = sorted(rnd.sample(range(lo, lo + n), min(rnd.randint(1, 3), n)))
+        return [ElasticEvent(EventKind.MIGRATE, step, (), layers=tuple(layers),
+                             src_stage=src, dst_stage=dst)]
+    return EventStrategy("migrate", fn, weight=0.5)
+
+
+def domain_burst(domains) -> EventStrategy:
+    """Correlated whole-domain (rack/pod) failure with a later rejoin of the
+    same block — the shape i.i.d. rank sampling never produces."""
+    def fn(rnd, st, step):
+        if domains is None or step >= st.horizon - 1:
+            return None
+        order = list(range(domains.n_domains))
+        rnd.shuffle(order)
+        for d in order:
+            ranks = {int(r) for r in domains.ranks_of([d])}
+            if ranks & (st.dead | st.reserved):
+                continue
+            if all(st.width(p) - sum(1 for r in ranks if r % st.pp == p) >= 1
+                   for p in range(st.pp)):
+                back = min(step + rnd.randint(1, 3), st.horizon - 1)
+                st.dead |= ranks
+                st.reserved |= ranks
+                return [burst(EventKind.FAIL_STOP, step, tuple(ranks),
+                              detail=f"domain {d} down"),
+                        burst(EventKind.SCALE_OUT, back, tuple(ranks),
+                              detail=f"domain {d} rejoin")]
+        return None
+    return EventStrategy("domain_burst", fn, weight=0.7)
+
+
+def draw_trace(rnd: random.Random, *, dp: int, pp: int, horizon: int,
+               strategies: Sequence[EventStrategy],
+               max_events: Optional[int] = None,
+               p_event: float = 0.6) -> List[ElasticEvent]:
+    """Walk the horizon; at each step maybe fire one weighted strategy."""
+    st = TraceState(dp=dp, pp=pp, horizon=horizon)
+    weights = [s.weight for s in strategies]
+    events: List[ElasticEvent] = []
+    for step in range(horizon):
+        if max_events is not None and len(events) >= max_events:
+            break
+        if rnd.random() >= p_event:
+            continue
+        strat = rnd.choices(list(strategies), weights=weights)[0]
+        got = strat.fn(rnd, st, step)
+        if got:
+            events.extend(got)
+    return events
+
+
+# ---------------------------------------------------------------------------
+# randomized workloads
+# ---------------------------------------------------------------------------
+def draw_analytic_workload(rnd: random.Random) -> AnalyticWorkload:
+    from repro.models import registry as R
+    pp = rnd.choice((1, 2, 2, 3, 4))
+    dp = rnd.randint(2, 6)
+    family = rnd.choice(("dense", "moe", "ssm"))
+    num_layers = pp * rnd.randint(2, 4)
+    mbs = rnd.choice((1, 2))
+    num_micro = rnd.randint(2, 4)
+    return AnalyticWorkload(
+        cfg=R.tiny_config(family, num_layers=num_layers),
+        dp=dp, pp=pp, mbs=mbs, global_batch=mbs * dp * num_micro,
+        seq=rnd.choice((64, 128, 256)), hw=HardwareSpec(),
+        domain_size=pp if rnd.random() < 0.5 else None)
+
+
+def draw_cluster_workload(rnd: random.Random) -> ClusterWorkload:
+    """Numeric workloads stay tiny: every VirtualCluster instance jit-compiles
+    its own step functions, so the fuzz budget goes to *traces*, not params."""
+    pp = rnd.choice((1, 2))
+    dp = rnd.randint(2, 3)
+    num_micro = rnd.choice((1, 2))
+    per_rank = rnd.choice((1, 2))
+    return ClusterWorkload(
+        family="dense", num_layers=2 * pp,
+        dropout_rate=rnd.choice((0.0, 0.1)), dp=dp, pp=pp,
+        global_batch=dp * num_micro * per_rank, num_micro=num_micro,
+        seq_len=8, seed=rnd.randrange(10 ** 6), rng_mode="reshard")
+
+
+def default_analytic_strategies(w: AnalyticWorkload) -> List[EventStrategy]:
+    return [failstop_burst(), rejoin(), fail_slow(), dvfs_set(),
+            shrink_regrow(), migrate(w.cfg.num_layers, w.pp),
+            domain_burst(w.domains)]
+
+
+def default_cluster_strategies() -> List[EventStrategy]:
+    """No MIGRATE (numeric executor rejects direct injection) and no domain
+    bursts (cluster grids are too small for whole-domain kills)."""
+    return [failstop_burst(max_ranks=2), rejoin(max_ranks=2),
+            fail_slow(factors=(1.5, 2.0)), dvfs_set(), shrink_regrow()]
+
+
+# ---------------------------------------------------------------------------
+# cases
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class FuzzCase:
+    """A fully-reproducible fuzz input: seed -> (workload, trace)."""
+    seed: int
+    mode: str                   # "analytic" | "cluster"
+    scenario: Scenario
+    workload: object            # AnalyticWorkload | ClusterWorkload
+
+    def repro(self, policy: Optional[str] = None) -> str:
+        cmd = (f"PYTHONPATH=src python -m benchmarks.fuzz_soak "
+               f"--mode {self.mode} --seed {self.seed}")
+        if policy:
+            cmd += f" --policy {policy}"
+        return cmd
+
+
+def make_analytic_case(seed: int) -> FuzzCase:
+    rnd = random.Random(f"analytic-{seed}")
+    w = draw_analytic_workload(rnd)
+    horizon = rnd.randint(6, 12)
+    events = draw_trace(rnd, dp=w.dp, pp=w.pp, horizon=horizon,
+                        strategies=default_analytic_strategies(w))
+    return FuzzCase(seed, "analytic",
+                    Scenario(f"fuzz-analytic-{seed}", tuple(events), horizon),
+                    w)
+
+
+def make_cluster_case(seed: int) -> FuzzCase:
+    rnd = random.Random(f"cluster-{seed}")
+    w = draw_cluster_workload(rnd)
+    horizon = rnd.randint(3, 5)
+    events = draw_trace(rnd, dp=w.dp, pp=w.pp, horizon=horizon,
+                        strategies=default_cluster_strategies(),
+                        max_events=3, p_event=0.7)
+    return FuzzCase(seed, "cluster",
+                    Scenario(f"fuzz-cluster-{seed}", tuple(events), horizon),
+                    w)
+
+
+def make_case(mode: str, seed: int) -> FuzzCase:
+    if mode == "analytic":
+        return make_analytic_case(seed)
+    if mode == "cluster":
+        return make_cluster_case(seed)
+    raise ValueError(f"unknown fuzz mode {mode!r}")
+
+
+POLICY_NAMES = ("elaswave", "torchft", "oobleck")
+
+
+def make_policy(name: str, hw: Optional[HardwareSpec] = None):
+    """Fresh policy per run — OobleckPolicy caches templates keyed by config
+    identity, so instances must not leak across workloads."""
+    from repro.core.policies import (ElasWavePolicy, OobleckPolicy,
+                                     TorchFTPolicy)
+    if name == "elaswave":
+        return ElasWavePolicy(hw=hw)
+    if name == "torchft":
+        return TorchFTPolicy()
+    if name == "oobleck":
+        return OobleckPolicy(hw=hw)
+    raise ValueError(f"unknown policy {name!r}")
+
+
+def run_case(case: FuzzCase, policy: Optional[str] = None, checkers=None,
+             **runner_kw):
+    """Run one fuzz case with the default invariant checkers attached.
+
+    An :class:`InvariantViolation` is re-raised with the fuzz seed and the
+    one-line repro command appended, so a red CI log is actionable as-is.
+    """
+    from .runner import AnalyticScenarioRunner, ClusterScenarioRunner
+    try:
+        if case.mode == "analytic":
+            pol = make_policy(policy or "elaswave", hw=case.workload.hw)
+            cks = (default_analytic_checkers() if checkers is None
+                   else checkers)
+            return AnalyticScenarioRunner(case.scenario, case.workload, pol,
+                                          checkers=cks, **runner_kw).run()
+        cks = default_cluster_checkers() if checkers is None else checkers
+        return ClusterScenarioRunner(case.scenario, case.workload,
+                                     checkers=cks, **runner_kw).run()
+    except InvariantViolation as e:
+        raise InvariantViolation(
+            f"{e}\n  fuzz seed {case.seed} ({case.mode}); reproduce with:\n"
+            f"  {case.repro(policy)}") from e
+
+
+def shrink_case(case: FuzzCase,
+                fails: Callable[[FuzzCase], bool]) -> FuzzCase:
+    """Greedy event-deletion minimization: repeatedly drop any single event
+    whose removal keeps the trace legal AND still failing.  Terminates when
+    no single deletion reproduces the failure (1-minimal trace)."""
+    current = case
+    progress = True
+    while progress:
+        progress = False
+        evs = list(current.scenario.events)
+        for i in range(len(evs)):
+            cand_events = evs[:i] + evs[i + 1:]
+            w = current.workload
+            if not trace_is_legal(cand_events, w.dp, w.pp):
+                continue
+            try:
+                cand_scn = Scenario(current.scenario.name,
+                                    tuple(cand_events),
+                                    current.scenario.horizon)
+            except ValueError:
+                continue
+            cand = dataclasses.replace(current, scenario=cand_scn)
+            try:
+                still_fails = fails(cand)
+            except Exception:
+                still_fails = True          # any crash counts as failing
+            if still_fails:
+                current = cand
+                progress = True
+                break
+    return current

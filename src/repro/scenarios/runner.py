@@ -41,21 +41,35 @@ from .spec import AnalyticWorkload, ClusterWorkload, Scenario
 
 
 class ClusterScenarioRunner:
-    """Numeric mode: scenario events against a live VirtualCluster."""
+    """Numeric mode: scenario events against a live VirtualCluster.
 
-    def __init__(self, scenario: Scenario, workload: ClusterWorkload):
+    ``checkers`` — a list of :class:`repro.core.invariants.InvariantChecker`
+    hooks, called after every event application and every training step, so
+    the paper's consistency guarantees are asserted at each point of the
+    trace rather than only at the end.
+    """
+
+    def __init__(self, scenario: Scenario, workload: ClusterWorkload, *,
+                 checkers=()):
         self.scenario = scenario
         self.workload = workload
+        self.checkers = list(checkers)
 
     def run(self) -> ScenarioResult:
         m = MetricsCollector()
         cl = self.workload.make_cluster()
+        for c in self.checkers:
+            c.on_cluster_start(self, cl)
         gb = self.workload.global_batch
         for step in range(self.scenario.horizon):
             for ev in self.scenario.events_at(step):
                 rec = cl.apply_event(ev)
                 m.record_recovery(step, ev, rec)
+                for c in self.checkers:
+                    c.after_cluster_event(step, ev, cl, rec)
             loss = cl.train_step()
+            for c in self.checkers:
+                c.after_cluster_step(step, cl, loss)
             t = cl.simulate_step_time()
             widths = [int(cl.alive[:, p].sum()) for p in range(cl.pp)]
             m.record_step(step, loss=float(loss), step_time=float(t),
@@ -85,7 +99,8 @@ class AnalyticScenarioRunner:
                  zero_layout: str = "interleaved",
                  blocking_migration: bool = False,
                  account_communicator: bool = True,
-                 comm_factory=DynamicCommunicator):
+                 comm_factory=DynamicCommunicator,
+                 checkers=()):
         self.scenario = scenario
         self.workload = workload
         self.policy = policy
@@ -97,19 +112,29 @@ class AnalyticScenarioRunner:
         # injection point for the dict/set oracle
         # (core.legacy_comm.LegacyDynamicCommunicator) in equivalence tests
         self.comm_factory = comm_factory
+        # repro.core.invariants.InvariantChecker hooks, fired after every
+        # event application and every decision boundary
+        self.checkers = list(checkers)
 
     # -- data-plane accounting --------------------------------------------
+    def delta_for_event(self, ev: ElasticEvent) -> GroupDelta:
+        """The group-membership delta this runner's accounting applies for
+        ``ev`` — shared with the MTTR invariant checker so its
+        legacy-communicator oracle replays the exact same delta sequence."""
+        if ev.is_grow:
+            return GroupDelta.grow(
+                [(f"dp_stage{r % self.workload.pp}_tp0", r)
+                 for r in ev.ranks])
+        return GroupDelta.shrink(list(ev.ranks))
+
     def _communicator_accounting(self, comm: DynamicCommunicator,
                                  ev: ElasticEvent) -> Dict[str, float]:
         """Price the three recovery modes from identical pre-event state
         (``price`` is pure — no clones), then commit the in-place edit
         (ElasWave's choice) to ``comm``."""
-        removed = list(ev.ranks)
+        delta = self.delta_for_event(ev)
         if ev.is_grow:
-            delta = GroupDelta.grow(
-                [(f"dp_stage{r % self.workload.pp}_tp0", r) for r in removed])
             return {"edit_seconds": comm.apply(delta, "edit").seconds}
-        delta = GroupDelta.shrink(removed)
         part = comm.price(delta, "partial_rebuild").seconds
         full = comm.price(delta, "full_rebuild").seconds
         edit = comm.apply(delta, "edit").seconds
@@ -158,6 +183,9 @@ class AnalyticScenarioRunner:
         base = ref.decide(seg, w.build_view(seg))
         thr0 = w.global_batch / base.step_time
 
+        for c in self.checkers:
+            c.on_analytic_start(self, seg, view, comm)
+
         boundaries = sorted({0} | set(self.scenario.event_steps))
         total_samples = 0.0
         decision = None
@@ -186,7 +214,11 @@ class AnalyticScenarioRunner:
                     else:
                         mttr["total"] = sum(mttr.values())
                 m.record_recovery(t, ev, mttr, **extra)
+                for c in self.checkers:
+                    c.after_analytic_event(t, ev, view, comm, extra)
             decision, thr, wall = self._decide(seg, view)
+            for c in self.checkers:
+                c.after_analytic_decision(t, view, decision, thr, thr0)
             end = boundaries[i + 1] if i + 1 < len(boundaries) else \
                 self.scenario.horizon
             dur = end - t
@@ -216,7 +248,7 @@ class AnalyticScenarioRunner:
 def run_scenario(scenario: Scenario, workload, **kw) -> ScenarioResult:
     """Mode is inferred from the workload type."""
     if isinstance(workload, ClusterWorkload):
-        return ClusterScenarioRunner(scenario, workload).run()
+        return ClusterScenarioRunner(scenario, workload, **kw).run()
     if isinstance(workload, AnalyticWorkload):
         return AnalyticScenarioRunner(scenario, workload, **kw).run()
     raise TypeError(f"unknown workload type: {type(workload)!r}")

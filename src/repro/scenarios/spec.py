@@ -46,15 +46,19 @@ class ClusterWorkload:
     seed: int = 0
     rng_mode: str = "reshard"
 
-    def make_cluster(self):
+    def make_cluster(self, **overrides):
+        """Build the VirtualCluster.  ``overrides`` pass straight through to
+        the constructor — e.g. ``fast_path=False`` builds the bit-exact
+        ``core/legacy.py`` twin the invariant harness locksteps against."""
         from repro.core.cluster import VirtualCluster
         from repro.models import registry as R
         cfg = R.tiny_config(self.family, num_layers=self.num_layers,
                             dropout_rate=self.dropout_rate)
-        return VirtualCluster(cfg, dp=self.dp, pp=self.pp,
-                              global_batch=self.global_batch,
-                              num_micro=self.num_micro, seq_len=self.seq_len,
-                              seed=self.seed, rng_mode=self.rng_mode)
+        kw = dict(global_batch=self.global_batch, num_micro=self.num_micro,
+                  seq_len=self.seq_len, seed=self.seed,
+                  rng_mode=self.rng_mode)
+        kw.update(overrides)
+        return VirtualCluster(cfg, dp=self.dp, pp=self.pp, **kw)
 
     def rank(self, d: int, p: int) -> int:
         return d * self.pp + p
@@ -145,6 +149,47 @@ def node_shrink_cells(n_nodes: int, dp: int, pp: int) -> List[Tuple[int, int]]:
 # ---------------------------------------------------------------------------
 # scenario
 # ---------------------------------------------------------------------------
+def validate_event_legality(events: Sequence[ElasticEvent],
+                            name: str = "trace") -> None:
+    """Construction-time trace legality — the fuzzer's definition of "legal".
+
+    Walks the (step-sorted) events with a dead-rank set and raises a crisp
+    ``ValueError`` on the shapes that used to fail deep inside the runner:
+    duplicate ranks within one burst, negative steps/ranks, rejoin
+    (SCALE_OUT) of a rank that is currently alive, and shrink (FAIL_STOP /
+    SCALE_IN) of a rank that is already dead.  FAIL_SLOW / DVFS_SET / MIGRATE
+    do not alter liveness (repeats are legal).  Grid-shape rules (never kill
+    a stage's last replica) need dp x pp and live in
+    ``scenarios.fuzz.trace_is_legal``.
+    """
+    dead: set = set()
+    for e in events:
+        if e.step < 0:
+            raise ValueError(
+                f"scenario {name!r}: event at negative step {e.step}")
+        if any(r < 0 for r in e.ranks):
+            raise ValueError(
+                f"scenario {name!r}: negative rank in {e.describe()}")
+        if len(set(e.ranks)) != len(e.ranks):
+            raise ValueError(
+                f"scenario {name!r}: duplicate ranks in burst "
+                f"{e.describe()} at step {e.step}")
+        if e.is_grow:
+            live = sorted(set(e.ranks) - dead)
+            if live:
+                raise ValueError(
+                    f"scenario {name!r}: rejoin of live rank(s) {live} at "
+                    f"step {e.step} (SCALE_OUT may only target dead ranks)")
+            dead -= set(e.ranks)
+        elif e.is_shrink:
+            already = sorted(set(e.ranks) & dead)
+            if already:
+                raise ValueError(
+                    f"scenario {name!r}: shrink of already-dead rank(s) "
+                    f"{already} at step {e.step}")
+            dead |= set(e.ranks)
+
+
 @dataclasses.dataclass
 class Scenario:
     """An ordered trace of timed elastic events over a horizon."""
@@ -160,6 +205,7 @@ class Scenario:
             raise ValueError(
                 f"event at step {self.events[-1].step} outside horizon "
                 f"{self.horizon} of scenario {self.name!r}")
+        validate_event_legality(self.events, self.name)
 
     def events_at(self, step: int) -> List[ElasticEvent]:
         return [e for e in self.events if e.step == step]

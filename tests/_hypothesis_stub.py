@@ -4,9 +4,15 @@ The container image does not ship ``hypothesis`` (see requirements-dev.txt,
 which pins it for CI).  Rather than skipping every property-based module at
 collection time, this stub re-implements the tiny slice of the API the test
 suite uses — ``given``, ``settings``, and the ``integers``/``floats``/
-``lists``/``sampled_from`` strategies — drawing a fixed number of examples
-from a seed derived from the test's qualified name, so runs are reproducible
-and the properties still get exercised on real values.
+``lists``/``sampled_from``/``tuples``/``booleans``/``one_of``/``data``
+strategies — drawing a fixed number of examples from a seed derived from the
+test's qualified name, so runs are reproducible and the properties still get
+exercised on real values.
+
+Failure reporting: when a property raises, the wrapper prints the derived
+seed string and every drawn value of the falsifying example before
+re-raising, so a stub-found counterexample is reproducible without
+hypothesis' shrinking database.
 
 When ``hypothesis`` IS installed the test modules import it directly and this
 file is inert.
@@ -73,9 +79,45 @@ def just(value):
     return Strategy(lambda rnd: value)
 
 
+def tuples(*strats):
+    return Strategy(lambda rnd: tuple(s.draw(rnd) for s in strats))
+
+
+def one_of(*strats):
+    if len(strats) == 1 and not isinstance(strats[0], Strategy):
+        strats = tuple(strats[0])       # hypothesis accepts one iterable too
+    if not strats:
+        raise ValueError("one_of requires at least one strategy")
+    return Strategy(lambda rnd: strats[rnd.randrange(len(strats))].draw(rnd))
+
+
+class DataObject:
+    """Interactive draws (``st.data()``): mid-test strategy pulls from the
+    same seeded stream, recorded for the falsifying-example report."""
+
+    def __init__(self, rnd):
+        self._rnd = rnd
+        self.draws = []
+
+    def draw(self, strategy, label=None):
+        v = strategy.draw(self._rnd)
+        self.draws.append((label, v))
+        return v
+
+    def __repr__(self):
+        inner = ", ".join(f"{lb or i}={v!r}"
+                          for i, (lb, v) in enumerate(self.draws))
+        return f"data({inner})"
+
+
+def data():
+    return Strategy(DataObject)
+
+
 strategies = SimpleNamespace(integers=integers, floats=floats, lists=lists,
                              sampled_from=sampled_from, booleans=booleans,
-                             just=just)
+                             just=just, tuples=tuples, one_of=one_of,
+                             data=data)
 
 
 def settings(max_examples=None, deadline=None, **_kw):
@@ -95,19 +137,30 @@ def given(*arg_strats, **kw_strats):
         sig = inspect.signature(fn)
         params = list(sig.parameters.values())
         n = len(arg_strats)
-        drawn = {p.name for p in params[len(params) - n:]} if n else set()
-        drawn |= set(kw_strats)
+        names = [p.name for p in params[len(params) - n:]] if n else []
+        drawn = set(names) | set(kw_strats)
         kept = [p for p in params if p.name not in drawn]
+        seed_str = f"{fn.__module__}.{fn.__qualname__}"
 
         @functools.wraps(fn)
         def wrapper(*args, **kwargs):
             limit = (getattr(wrapper, "_stub_max_examples", None)
                      or getattr(fn, "_stub_max_examples", None) or MAX_EXAMPLES)
-            rnd = random.Random(f"{fn.__module__}.{fn.__qualname__}")
-            for _ in range(min(int(limit), MAX_EXAMPLES)):
+            limit = min(int(limit), MAX_EXAMPLES)
+            rnd = random.Random(seed_str)
+            for i in range(limit):
                 vals = [s.draw(rnd) for s in arg_strats]
                 kvals = {k: s.draw(rnd) for k, s in kw_strats.items()}
-                fn(*args, *vals, **kwargs, **kvals)
+                try:
+                    fn(*args, *vals, **kwargs, **kvals)
+                except Exception:
+                    pairs = list(zip(names, vals)) + sorted(kvals.items())
+                    shown = ", ".join(f"{k}={v!r}" for k, v in pairs)
+                    print(f"\n[hypothesis-stub] falsifying example "
+                          f"{i + 1}/{limit} of {seed_str}\n"
+                          f"  seed string: {seed_str!r}\n"
+                          f"  drawn: {shown}")
+                    raise
 
         del wrapper.__wrapped__          # hide drawn params from pytest
         wrapper.__signature__ = sig.replace(parameters=kept)

@@ -15,6 +15,10 @@ from repro.core.cluster import VirtualCluster
 from repro.core.statespace import COMPONENTS
 from repro.models import registry as R
 
+# every test here drives real jit-compiled training on TWO clusters — the
+# whole module lives in the slow shard (fast CI runs -m "not slow")
+pytestmark = pytest.mark.slow
+
 CFG = R.tiny_config("dense", num_layers=8, dropout_rate=0.1)
 
 

@@ -40,6 +40,7 @@ def sequences(engine, n):
 # ---------------------------------------------------------------------------
 # numeric: migration bit-exactness (greedy and sampled streams)
 # ---------------------------------------------------------------------------
+@pytest.mark.slow
 class TestMigrationBitExact:
     @pytest.mark.parametrize("sampler", [
         SamplerConfig(),                                        # greedy
@@ -84,6 +85,7 @@ class TestMigrationBitExact:
 # ---------------------------------------------------------------------------
 # numeric: offline generation (enc-dec fixed to work, not rejected)
 # ---------------------------------------------------------------------------
+@pytest.mark.slow
 class TestOfflineGenerate:
     def test_encdec_serves_through_engine(self):
         cfg = R.tiny_config("audio", dropout_rate=0.0)
@@ -142,6 +144,83 @@ class TestRecoveryPolicies:
         eng.apply_event(ElasticEvent(EventKind.SCALE_OUT, 0, (3,)))
         assert sorted(eng.replicas) == [0, 3]
         assert eng.agent.ranks == [0, 3]
+
+
+class TestRecoveryEdges:
+    """Recovery edge cases: a burst SCALE_IN that removes a replica which
+    just *received* migrated slots (concurrent scale-in during an in-flight
+    migration), full survivors under both migrate and drop dispositions."""
+
+    def test_scale_in_burst_chains_migrations_through_doomed_replica(self):
+        """One burst removes replicas 0 AND 1: replica 0's slots migrate
+        into a survivor that is itself being removed later in the same
+        event, so they must hop again — zero drops, streams unchanged."""
+        def make():
+            eng = synthetic_engine(n_replicas=3, slots=4)
+            submit_n(eng, 6)
+            return eng
+
+        base = make()
+        base.drain()
+        want = sequences(base, 6)
+
+        eng = make()
+        eng.tick()
+        eng.tick()
+        assert all(eng.replicas[r].pool.n_active == 2 for r in range(3))
+        stats = eng.apply_event(
+            ElasticEvent(EventKind.SCALE_IN, 0, (0, 1)))
+        assert stats["dropped"] == 0
+        # replica 0's two slots land on a survivor, replica 1's (its own two
+        # plus any just-received) hop onward; everything ends on replica 2
+        assert stats["migrated"] + stats["rebuilt"] >= 4
+        assert sorted(eng.replicas) == [2]
+        assert eng.replicas[2].pool.n_active + len(eng.queue) == 6 - \
+            eng.summary()["completed"]
+        eng.drain()
+        assert sequences(eng, 6) == want
+        s = eng.summary()
+        assert s["completed"] == 6 and s["dropped"] == 0
+
+    def test_migrate_falls_back_to_rebuild_when_survivors_full(self):
+        """ElasWave policy on SCALE_IN prefers migration, but with zero free
+        survivor slots it must degrade to requeue-with-prefix (rebuild), not
+        drop — and the requeued work still completes."""
+        eng = synthetic_engine(n_replicas=2, slots=2)
+        submit_n(eng, 4)                      # fills both replicas exactly
+        eng.tick()
+        eng.tick()
+        assert all(r.pool.n_free == 0 for r in eng.alive_replicas())
+        stats = eng.apply_event(ElasticEvent(EventKind.SCALE_IN, 0, (0,)))
+        assert stats["migrated"] == 0         # nowhere to put the KV
+        assert stats["rebuilt"] == 2 and stats["dropped"] == 0
+        assert stats["kv_bytes_moved"] == 0
+        eng.drain()
+        s = eng.summary()
+        assert s["completed"] == 4 and s["dropped"] == 0
+        assert s["re_prefills"] == 2
+
+    def test_drop_accounting_with_full_survivors(self):
+        """DROP disposition with survivors at capacity: the departing
+        replica's in-flight work is charged as dropped (not rebuilt, no KV
+        movement, no stall), survivors' work is untouched, and queued work
+        still drains through the remaining capacity."""
+        eng = synthetic_engine(policy=DropPolicy(), n_replicas=2, slots=2)
+        submit_n(eng, 6)                      # 4 in flight + 2 queued
+        eng.tick()
+        eng.tick()
+        assert eng.n_active == 4 and len(eng.queue) == 2
+        stats = eng.apply_event(ElasticEvent(EventKind.SCALE_IN, 0, (0,)))
+        assert stats["dropped"] == 2
+        assert stats["migrated"] == 0 and stats["rebuilt"] == 0
+        assert stats["kv_bytes_moved"] == 0
+        assert stats["stall_seconds"] == 0.0  # graceful + no KV to move
+        eng.drain()
+        s = eng.summary()
+        assert s["dropped"] == 2 and s["completed"] == 4
+        dropped = {r.rid for r in eng.requests.values()
+                   if r.state == RequestState.DROPPED}
+        assert len(dropped) == 2              # exactly the doomed slots
 
 
 class TestSLOAdmission:

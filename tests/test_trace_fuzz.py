@@ -1,0 +1,321 @@
+"""Elastic-trace fuzzing: the four paper guarantees over random legal traces.
+
+Every failure prints a one-line repro command carrying the fuzz seed
+(``FuzzCase.repro()``), so a red CI log reproduces the exact workload + trace
+with ``PYTHONPATH=src python -m benchmarks.fuzz_soak --mode ... --seed ...``.
+
+Budgets: ``ELASWAVE_FUZZ_ANALYTIC`` (default 200 seeds x 3 policies, runs in
+seconds) and ``ELASWAVE_FUZZ_NUMERIC`` (default 25 seeds, slow-marked: every
+VirtualCluster jit-compiles afresh).  The injected-violation tests prove the
+harness actually *fails* — each guarantee is broken on purpose (shard
+corruption, rank-addressed RNG, tampered communicator, batch mutation) and
+must be caught with the seed line attached.
+"""
+import dataclasses
+import os
+import random
+
+import numpy as np
+import pytest
+
+import _hypothesis_stub as hs
+
+from repro.core.communicator import DynamicCommunicator
+from repro.core.events import ElasticEvent, EventKind
+from repro.core.invariants import (DataflowConsistencyChecker,
+                                   InvariantChecker, InvariantViolation,
+                                   ParameterConsistencyChecker,
+                                   default_analytic_checkers)
+from repro.scenarios import (ClusterWorkload, POLICY_NAMES, Scenario,
+                             make_analytic_case, make_cluster_case, run_case,
+                             shrink_case, trace_is_legal)
+from repro.scenarios.fuzz import FuzzCase
+
+N_ANALYTIC = int(os.environ.get("ELASWAVE_FUZZ_ANALYTIC", "200"))
+N_NUMERIC = int(os.environ.get("ELASWAVE_FUZZ_NUMERIC", "25"))
+
+
+def _run_reporting(case, policy=None, **kw):
+    """Run one case; on violation the repro line is already attached by
+    ``run_case`` — just let it propagate (pytest shows the full message)."""
+    return run_case(case, policy=policy, **kw)
+
+
+# ---------------------------------------------------------------------------
+# the headline properties
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("policy", POLICY_NAMES)
+def test_analytic_traces_uphold_invariants(policy):
+    """>= N_ANALYTIC random legal analytic traces per policy, all four
+    checkable analytic guarantees asserted after every event/decision."""
+    for seed in range(N_ANALYTIC):
+        _run_reporting(make_analytic_case(seed), policy=policy)
+
+
+def test_numeric_smoke_traces_uphold_invariants():
+    """Two numeric traces stay in the fast shard so the full checker stack
+    (twin-oracle lockstep included) is exercised on every CI run."""
+    for seed in (90, 91):
+        _run_reporting(make_cluster_case(seed))
+
+
+@pytest.mark.slow
+def test_numeric_traces_uphold_invariants():
+    """>= N_NUMERIC random legal numeric traces through the VirtualCluster
+    with the full four-invariant checker stack."""
+    for seed in range(N_NUMERIC):
+        _run_reporting(make_cluster_case(seed))
+
+
+# ---------------------------------------------------------------------------
+# injected violations: the harness must catch every broken guarantee
+# ---------------------------------------------------------------------------
+def _cluster_case_with_shrink():
+    for seed in range(60):
+        c = make_cluster_case(seed)
+        if any(e.is_shrink for e in c.scenario.events):
+            return c
+    raise RuntimeError("no shrink-bearing cluster seed in range")
+
+
+def _analytic_case_with_shrink():
+    for seed in range(60):
+        c = make_analytic_case(seed)
+        if any(e.is_shrink for e in c.scenario.events):
+            return c
+    raise RuntimeError("no shrink-bearing analytic seed in range")
+
+
+class _ShardCorruptor(InvariantChecker):
+    """Flips one master-weight element after each step (a silent bit error)."""
+    name = "shard-corruptor"
+
+    def after_cluster_step(self, step, cluster, loss):
+        cluster.stages[0].flat["master"][0] += 1.0
+
+
+def test_injected_shard_corruption_is_caught():
+    case = _cluster_case_with_shrink()
+    with pytest.raises(InvariantViolation) as ei:
+        run_case(case, checkers=[_ShardCorruptor(),
+                                 ParameterConsistencyChecker()])
+    msg = str(ei.value)
+    assert "parameter-consistency" in msg
+    assert f"fuzz seed {case.seed}" in msg          # one-line repro attached
+    assert f"--seed {case.seed}" in msg
+
+
+def test_naive_rng_mode_is_caught():
+    """The paper's rank-addressed ablation moves surviving samples' streams
+    on the first dataflow resize — the RNG checker must flag it (§4.4)."""
+    case = _cluster_case_with_shrink()
+    naive = FuzzCase(case.seed, case.mode, case.scenario,
+                     dataclasses.replace(case.workload, rng_mode="naive"))
+    with pytest.raises(InvariantViolation, match="rng-consistency"):
+        run_case(naive)
+
+
+class _TamperedComm(DynamicCommunicator):
+    """A communicator whose committed edits cost twice the truth."""
+
+    def apply(self, delta, policy="edit"):
+        stats = super().apply(delta, policy)
+        stats.seconds *= 2.0
+        return stats
+
+
+def test_tampered_communicator_is_caught():
+    case = _analytic_case_with_shrink()
+    with pytest.raises(InvariantViolation, match="mttr-throughput"):
+        run_case(case, policy="elaswave", comm_factory=_TamperedComm)
+
+
+class _BatchMutator(InvariantChecker):
+    """Silently shrinks the global batch after the first event (§4.1)."""
+    name = "batch-mutator"
+
+    def after_analytic_event(self, step, event, view, comm, extra):
+        view.global_batch -= 1
+
+
+def test_mutated_global_batch_is_caught():
+    case = _analytic_case_with_shrink()
+    with pytest.raises(InvariantViolation, match="dataflow-consistency"):
+        run_case(case, policy="elaswave",
+                 checkers=[_BatchMutator(), DataflowConsistencyChecker()])
+
+
+# ---------------------------------------------------------------------------
+# generator self-tests
+# ---------------------------------------------------------------------------
+def test_generated_analytic_traces_are_legal():
+    for seed in range(100):
+        c = make_analytic_case(seed)
+        assert trace_is_legal(c.scenario.events, c.workload.dp,
+                              c.workload.pp), f"seed {seed}"
+
+
+def test_generation_is_deterministic():
+    for seed in (0, 7, 123):
+        a = make_analytic_case(seed)
+        b = make_analytic_case(seed)
+        assert [e.describe() for e in a.scenario.events] == \
+               [e.describe() for e in b.scenario.events]
+        assert a.workload == b.workload
+        assert a.scenario.horizon == b.scenario.horizon
+
+
+def test_cluster_traces_never_inject_migrate():
+    """MIGRATE is analytic-only; the numeric executor rejects it."""
+    for seed in range(60):
+        c = make_cluster_case(seed)
+        assert all(e.kind != EventKind.MIGRATE for e in c.scenario.events)
+
+
+def test_cluster_traces_respect_event_budget():
+    for seed in range(60):
+        c = make_cluster_case(seed)
+        # max_events=3 plus at most one trailing scheduled rejoin pair
+        assert len(c.scenario.events) <= 4
+
+
+def test_shrinker_minimizes_to_single_event():
+    """Greedy event deletion on a synthetic predicate (trace contains a
+    fail-slow with factor >= 2) must reach the 1-minimal trace."""
+    wl = ClusterWorkload(dp=3, pp=1, global_batch=6, num_micro=1, seq_len=8,
+                         num_layers=2)
+    events = (
+        ElasticEvent(EventKind.FAIL_STOP, 0, (1,)),
+        ElasticEvent(EventKind.DVFS_SET, 1, (0,), freq=1.1),
+        ElasticEvent(EventKind.FAIL_SLOW, 2, (0,), slow_factor=3.0),
+        ElasticEvent(EventKind.SCALE_OUT, 3, (1,)),
+        ElasticEvent(EventKind.FAIL_SLOW, 4, (2,), slow_factor=1.5),
+    )
+    case = FuzzCase(0, "cluster", Scenario("shrink-me", events, 6), wl)
+
+    def fails(c):
+        return any(e.kind == EventKind.FAIL_SLOW and e.slow_factor >= 2
+                   for e in c.scenario.events)
+
+    small = shrink_case(case, fails)
+    assert len(small.scenario.events) == 1
+    ev = small.scenario.events[0]
+    assert ev.kind == EventKind.FAIL_SLOW and ev.slow_factor == 3.0
+
+
+def test_shrinker_never_emits_illegal_traces():
+    """Deleting a kill must drag its dependent rejoin out of consideration —
+    every intermediate candidate offered to the predicate is legal."""
+    wl = ClusterWorkload(dp=2, pp=1, global_batch=4, num_micro=1, seq_len=8,
+                         num_layers=2)
+    events = (
+        ElasticEvent(EventKind.SCALE_IN, 0, (1,)),
+        ElasticEvent(EventKind.SCALE_OUT, 1, (1,)),
+        ElasticEvent(EventKind.FAIL_SLOW, 2, (0,), slow_factor=2.0),
+    )
+    case = FuzzCase(0, "cluster", Scenario("dep", events, 4), wl)
+    seen = []
+
+    def fails(c):
+        assert trace_is_legal(c.scenario.events, wl.dp, wl.pp)
+        seen.append(tuple(e.describe() for e in c.scenario.events))
+        return any(e.kind == EventKind.FAIL_SLOW for e in c.scenario.events)
+
+    small = shrink_case(case, fails)
+    assert len(small.scenario.events) == 1
+    assert seen                                   # predicate actually probed
+
+
+# ---------------------------------------------------------------------------
+# construction-time legality (satellite: crisp ValueErrors)
+# ---------------------------------------------------------------------------
+class TestEventLegality:
+    def test_duplicate_ranks_in_burst(self):
+        with pytest.raises(ValueError, match="duplicate ranks"):
+            Scenario("bad", (ElasticEvent(EventKind.FAIL_STOP, 0, (1, 1)),), 4)
+
+    def test_rejoin_of_live_rank(self):
+        with pytest.raises(ValueError, match="rejoin of live rank"):
+            Scenario("bad", (ElasticEvent(EventKind.SCALE_OUT, 0, (2,)),), 4)
+
+    def test_refail_of_dead_rank(self):
+        with pytest.raises(ValueError, match="already-dead"):
+            Scenario("bad", (ElasticEvent(EventKind.FAIL_STOP, 0, (1,)),
+                             ElasticEvent(EventKind.SCALE_IN, 1, (1,))), 4)
+
+    def test_negative_step(self):
+        with pytest.raises(ValueError, match="negative step"):
+            Scenario("bad", (ElasticEvent(EventKind.FAIL_STOP, -1, (1,)),), 4)
+
+    def test_negative_rank(self):
+        with pytest.raises(ValueError, match="negative rank"):
+            Scenario("bad", (ElasticEvent(EventKind.FAIL_STOP, 0, (-3,)),), 4)
+
+    def test_rejoin_before_fail_is_rejected(self):
+        # events sort by step, so rejoin@0 precedes fail@1 -> rejoin-of-live
+        with pytest.raises(ValueError, match="rejoin of live rank"):
+            Scenario.shrink_regrow("bad", rank=1, fail_step=2, rejoin_step=1,
+                                   horizon=4)
+
+    def test_legal_shrink_regrow_still_constructs(self):
+        s = Scenario.shrink_regrow("ok", rank=1, fail_step=1, rejoin_step=2,
+                                   horizon=4)
+        assert len(s.events) == 2
+
+    def test_fail_slow_repeats_are_legal(self):
+        s = Scenario.cascade("ok", [(0, 1.5), (0, 2.0)], start=0, spacing=1,
+                             horizon=4)
+        assert len(s.events) == 2
+
+    def test_trace_is_legal_rejects_last_replica_kill(self):
+        evs = [ElasticEvent(EventKind.FAIL_STOP, 0, (0, 2)),
+               ElasticEvent(EventKind.FAIL_STOP, 1, (4,))]
+        assert not trace_is_legal(evs, dp=3, pp=2)   # stage 0 emptied
+        assert trace_is_legal(evs[:1], dp=3, pp=2)
+
+    def test_trace_is_legal_rejects_out_of_grid_rank(self):
+        evs = [ElasticEvent(EventKind.FAIL_STOP, 0, (99,))]
+        assert not trace_is_legal(evs, dp=2, pp=2)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis-stub upgrades (satellite)
+# ---------------------------------------------------------------------------
+class TestHypothesisStub:
+    def test_tuples_booleans_one_of_deterministic(self):
+        st = hs.strategies
+        strat = st.tuples(st.integers(0, 9), st.booleans(),
+                          st.one_of(st.just("a"), st.just("b")))
+        a = [strat.draw(random.Random(42)) for _ in range(5)]
+        b = [strat.draw(random.Random(42)) for _ in range(5)]
+        assert a == b
+        x, flag, tag = a[0]
+        assert 0 <= x <= 9 and isinstance(flag, bool) and tag in ("a", "b")
+
+    def test_one_of_accepts_iterable(self):
+        st = hs.strategies
+        strat = st.one_of([st.just(1), st.just(2)])
+        assert strat.draw(random.Random(0)) in (1, 2)
+
+    def test_data_records_draws(self):
+        st = hs.strategies
+        d = st.data().draw(random.Random(0))
+        v = d.draw(st.integers(5, 5), label="x")
+        assert v == 5
+        assert "x=5" in repr(d)
+
+    def test_failure_report_prints_seed_and_values(self, capsys):
+        @hs.given(hs.strategies.integers(0, 3))
+        def prop(value):
+            raise AssertionError("boom")
+
+        with pytest.raises(AssertionError, match="boom"):
+            prop()
+        out = capsys.readouterr().out
+        assert "falsifying example" in out
+        assert "value=" in out                      # drawn values reported
+        assert f"{prop.__module__}" in out          # derived seed string
+
+
+if __name__ == "__main__":
+    raise SystemExit(pytest.main([__file__, "-v"]))
