@@ -23,11 +23,12 @@ import pathlib
 import sys
 import traceback
 
-from repro.scenarios import POLICY_NAMES, make_case, run_case, shrink_case
+from repro.scenarios import (POLICY_NAMES, make_case, run_case,
+                             run_chaos_case, shrink_case)
 
 
 def _case_record(case, policy, err):
-    return {
+    rec = {
         "seed": case.seed,
         "mode": case.mode,
         "policy": policy,
@@ -37,19 +38,31 @@ def _case_record(case, policy, err):
         "error": str(err),
         "repro": case.repro(policy),
     }
+    if case.mode == "chaos":
+        rec["chaos_class"] = case.chaos_class
+        rec["actions"] = [f"step={a.step} {a.kind} rank={a.rank}"
+                          for a in case.actions]
+    return rec
+
+
+def _run(case, policy):
+    if case.mode == "chaos":
+        run_chaos_case(case)            # perturbed-detection-plane property
+    else:
+        run_case(case, policy=policy)   # perfectly-detected trace invariants
 
 
 def _soak_one(mode: str, seed: int, policy, out_dir, minimize: bool):
     """Returns None on success, else the JSON failure record."""
     case = make_case(mode, seed)
     try:
-        run_case(case, policy=policy)
+        _run(case, policy)
         return None
     except Exception as err:                                # noqa: BLE001
         first_err = err
 
     rec = _case_record(case, policy, first_err)
-    if minimize:
+    if minimize and mode != "chaos":    # chaos repro = seed, nothing to shrink
         def fails(c):
             try:
                 run_case(c, policy=policy)
@@ -76,11 +89,16 @@ def main(argv=None) -> int:
     ap.add_argument("--numeric-traces", type=int, default=0,
                     help="numeric (VirtualCluster) trace budget — slow: "
                          "every cluster jit-compiles afresh")
+    ap.add_argument("--chaos-traces", type=int, default=0,
+                    help="detection-chaos trace budget (VirtualCluster under "
+                         "dropped/delayed/duplicated/flapping probes and "
+                         "corrupted snapshot shards) — slow, like "
+                         "--numeric-traces")
     ap.add_argument("--base-seed", type=int, default=0,
                     help="first seed of the sweep")
     ap.add_argument("--seed", type=int, default=None,
                     help="reproduce exactly one seed and exit")
-    ap.add_argument("--mode", choices=("analytic", "cluster"),
+    ap.add_argument("--mode", choices=("analytic", "cluster", "chaos"),
                     default="analytic", help="mode for --seed repro runs")
     ap.add_argument("--policy", choices=POLICY_NAMES, default=None,
                     help="restrict to one policy (analytic mode)")
@@ -98,14 +116,18 @@ def main(argv=None) -> int:
               f"{case.scenario.horizon}, workload {case.workload.describe()}")
         for e in case.scenario.events:
             print(f"#   {e.describe()}")
+        if args.mode == "chaos":
+            print(f"# chaos class {case.chaos_class}; ground truth:")
+            for a in case.actions:
+                print(f"#   step={a.step} {a.kind} rank={a.rank}")
         policies = ([args.policy] if args.policy
                     else (list(POLICY_NAMES) if args.mode == "analytic"
                           else [None]))
         status = 0
         for pol in policies:
             try:
-                run_case(case, policy=pol)
-                print(f"PASS {pol or 'cluster'}")
+                _run(case, pol)
+                print(f"PASS {pol or args.mode}")
             except Exception:                               # noqa: BLE001
                 traceback.print_exc()
                 status += 1
@@ -115,7 +137,8 @@ def main(argv=None) -> int:
     runs = 0
     plan = [("analytic", args.traces,
              [args.policy] if args.policy else list(POLICY_NAMES)),
-            ("cluster", args.numeric_traces, [None])]
+            ("cluster", args.numeric_traces, [None]),
+            ("chaos", args.chaos_traces, [None])]
     for mode, budget, policies in plan:
         for i in range(budget):
             seed = args.base_seed + i
@@ -127,8 +150,8 @@ def main(argv=None) -> int:
                     n_min = len(rec.get("minimized_events",
                                         rec["events"]))
                     print(f"FAIL {mode} seed {seed} "
-                          f"policy={pol or 'cluster'} "
-                          f"({rec['minimized_from'] if minimize else '?'}"
+                          f"policy={pol or mode} "
+                          f"({rec.get('minimized_from', '?')}"
                           f" -> {n_min} events)\n  {rec['repro']}",
                           file=sys.stderr)
     print(f"fuzz soak: {runs} runs, {len(failures)} failures"

@@ -9,9 +9,9 @@ import traceback
 def main() -> None:
     from . import (analytic_scale, communicator_mttr,
                    convergence_consistency, failslow, lse_breakdown,
-                   migration_mttr, moe_case, roofline, scenarios_suite,
-                   serve_bench, snapshot_overhead, spot_trace,
-                   throughput_failstop, train_step_perf)
+                   migration_mttr, moe_case, proactive_mttr, roofline,
+                   scenarios_suite, serve_bench, snapshot_overhead,
+                   spot_trace, throughput_failstop, train_step_perf)
     print("name,us_per_call,derived")
     mods = [
         ("fig11", throughput_failstop),
@@ -28,6 +28,7 @@ def main() -> None:
         ("bench_step", train_step_perf),
         ("bench_serve", serve_bench),
         ("analytic_scale", analytic_scale),
+        ("proactive", proactive_mttr),
     ]
     failed = []
     for name, mod in mods:

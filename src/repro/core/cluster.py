@@ -53,6 +53,7 @@ from repro.optim.adam import AdamConfig, adam_update_flat_np
 from . import legacy
 from .agent import Agent, Probe
 from .clusterview import GroupDelta
+from .controller import ElasticController
 from .communicator import DynamicCommunicator, build_hybrid_groups
 from .cost_model import HardwareSpec, SegmentCosts
 from .engine import RecoveryPlan, ScheduleEngine
@@ -67,14 +68,21 @@ from .statespace import (COMPONENTS, HEAD, STEM, EntryFlattener, StageState,
 
 def _recovery_record(*, detect: float = 0.0, plan: float = 0.0,
                      communicator: float = 0.0, remap: float = 0.0,
-                     migration: float = 0.0, rng_moves: int = 0,
-                     ) -> Dict[str, float]:
+                     migration: float = 0.0, verify: float = 0.0,
+                     rng_moves: int = 0, degraded: int = 0,
+                     overlap_saved: float = 0.0) -> Dict[str, float]:
     """One schema for every recovery record, regardless of event kind, so
-    ``_merge_recovery_records`` output shape never depends on the event."""
+    ``_merge_recovery_records`` output shape never depends on the event.
+
+    ``verify`` (snapshot integrity scan) is a timed phase included in the
+    total; ``degraded`` counts tolerance-tier shard rebuilds (zeroed Adam
+    moments) and ``overlap_saved`` is stall hidden inside a preemption-notice
+    window — info counters, not stall time, so they stay out of the total."""
     return {"detect": detect, "plan": plan, "communicator": communicator,
-            "remap": remap, "migration": migration,
-            "total": detect + plan + communicator + remap + migration,
-            "rng_moves": rng_moves}
+            "remap": remap, "migration": migration, "verify": verify,
+            "total": detect + plan + communicator + remap + migration + verify,
+            "rng_moves": rng_moves, "degraded": degraded,
+            "overlap_saved": overlap_saved}
 
 
 class VirtualCluster:
@@ -128,6 +136,7 @@ class VirtualCluster:
         self.alive = np.ones((dp, pp), dtype=bool)
         self.freq = np.ones((dp, pp))
         self.slow = np.ones((dp, pp))
+        self.mem_used = np.zeros((dp, pp))   # fraction of capacity (probes)
 
         # ---- ZeRO stage states + snapshots ----
         self.stages: List[StageState] = []
@@ -142,7 +151,11 @@ class VirtualCluster:
 
         # ---- control plane ----
         self.comm = DynamicCommunicator(build_hybrid_groups(dp, pp))
-        self.agent = Agent(dp * pp)
+        # rank = d * pp + p, so the agent's stage topology is rank % pp —
+        # fail-slow verdicts compare against stage peers, not the fleet
+        self.agent = Agent(dp * pp,
+                           stage_of={r: r % pp for r in range(dp * pp)})
+        self.controller = ElasticController(self.agent)
         self.engine = ScheduleEngine(cfg, seq_len, self.hw, mem_cap)
         self.remapper = LiveRemap()
 
@@ -153,6 +166,7 @@ class VirtualCluster:
         self.grad_weights: List[float] = [1.0 / dp] * dp
         self.losses: List[float] = []
         self.recoveries: List[Dict[str, float]] = []
+        self.warnings: List[ElasticEvent] = []   # advisory (OOM_RISK) events
         self.seg = SegmentCosts.build(cfg, seq_len, self.hw)
         self._grad_fn_cache: Dict[int, Any] = {}
         self._scan_grad_cache: Dict[Tuple[int, int], Any] = {}
@@ -373,8 +387,17 @@ class VirtualCluster:
     def inject_fail_slow(self, d: int, p: int, factor: float):
         self.slow[d, p] = factor
 
+    def inject_mem_pressure(self, d: int, p: int, used_fraction: float):
+        """Set the fraction of device memory worker (d, p) reports via its
+        probes — feeds the Agent's OOM early-warning trend."""
+        self.mem_used[d, p] = used_fraction
+
     def detect_and_recover(self) -> Optional[Dict[str, float]]:
-        """Agent probes -> events -> ScheduleEngine plan -> executor."""
+        """Controller probes -> events -> ScheduleEngine plan -> executor.
+
+        The loop bound is the controller's worst-case confirmation threshold
+        (``max_confirm_misses``), not the bare miss limit: a rank that
+        flapped earlier has an exponentially backed-off bar to clear."""
         probes = []
         base_t = self.simulate_step_time()
         for d in range(self.dp0):
@@ -382,10 +405,11 @@ class VirtualCluster:
                 rank = d * self.pp + p
                 probes.append(Probe(self.step_count, rank,
                                     heartbeat=bool(self.alive[d, p]),
-                                    step_seconds=base_t * self.slow[d, p]))
+                                    step_seconds=base_t * self.slow[d, p],
+                                    mem_used=float(self.mem_used[d, p])))
         events: List[ElasticEvent] = []
-        for _ in range(self.agent.miss_limit):
-            events = self.agent.observe(probes)
+        for _ in range(self.controller.max_confirm_misses()):
+            events = self.controller.observe(probes)
             if events:
                 break
         if not events:
@@ -412,12 +436,22 @@ class VirtualCluster:
                                            t_detect=t_detect if i == 0 else 0.0)
                     for i, (d, p) in enumerate(cells)]
             return _merge_recovery_records(recs)
+        if ev.kind == EventKind.PREEMPT_NOTICE:
+            # proactive drain: no detection phase (the scheduler TOLD us),
+            # and recovery work overlaps the notice window
+            recs = [self.drain_rank(d, p, deadline=ev.deadline)
+                    for d, p in cells]
+            return _merge_recovery_records(recs)
         if ev.kind == EventKind.SCALE_OUT:
             recs = [self.recover_scale_out(d, p) for d, p in cells]
             return _merge_recovery_records(recs)
         if ev.kind == EventKind.DVFS_SET:
             for d, p in cells:
                 self.freq[d, p] = ev.freq
+            return _recovery_record()
+        if ev.kind == EventKind.OOM_RISK:
+            # advisory: record the warning, no state or liveness change
+            self.warnings.append(ev)
             return _recovery_record()
         raise ValueError(f"unsupported elastic event kind here: {ev.kind}")
 
@@ -459,13 +493,25 @@ class VirtualCluster:
         return self.apply_plan(self.plan_event(ev), t_detect=t_detect)
 
     def apply_plan(self, plan: RecoveryPlan, t_detect: float = 0.5,
-                   ) -> Dict[str, float]:
+                   drain: bool = False) -> Dict[str, float]:
         """Execute a shrink RecoveryPlan (the paper's event -> plan -> apply
-        path): communicator edit, live remap, layer migration, dataflow
-        resize, DVFS top-up.  Returns the itemized MTTR record."""
+        path): snapshot verification, communicator edit, live remap, layer
+        migration, dataflow resize, DVFS top-up.  Returns the itemized MTTR
+        record.
+
+        ``drain=True`` is the proactive PREEMPT_NOTICE path: the departing
+        rank's device state is still addressable (corrupt snapshots re-derive
+        from it bit-for-bit), and the communicator/remap/migration work
+        overlaps the notice window — only the part exceeding
+        ``plan.event.deadline`` stalls training; the hidden part is recorded
+        as ``overlap_saved``."""
         ev = plan.event
         rank = ev.ranks[0]
         d, p = rank // self.pp, rank % self.pp
+
+        # --- snapshot integrity: verify (and repair) recovery sources ---
+        t_verify, n_degraded = self._verify_snapshot_sources(
+            p, failed=[d], drain=drain)
 
         # --- communicator: in-place edit ---
         comm_stats = self.comm.apply(GroupDelta.shrink([d * self.pp + p]),
@@ -494,13 +540,86 @@ class VirtualCluster:
         # accrue misses forever; a SCALE_OUT rejoin re-registers it)
         self.agent.remove_rank(rank)
 
+        # --- overlap accounting (proactive drain only) ---
+        t_comm = comm_stats.seconds
+        overlap_saved = 0.0
+        work = t_comm + t_remap + t_migr
+        if drain and work > 0:
+            stall = max(0.0, work - ev.deadline)
+            scale = stall / work
+            overlap_saved = work - stall
+            t_comm *= scale
+            t_remap *= scale
+            t_migr *= scale
+
         rec = _recovery_record(
             detect=t_detect, plan=plan.plan_seconds,
-            communicator=comm_stats.seconds, remap=t_remap, migration=t_migr,
+            communicator=t_comm, remap=t_remap, migration=t_migr,
+            verify=t_verify,
             rng_moves=len(plan.rng.layer_stream_moves)
-            + len(plan.rng.sample_stream_moves))
+            + len(plan.rng.sample_stream_moves),
+            degraded=n_degraded, overlap_saved=overlap_saved)
         self.recoveries.append(rec)
         return rec
+
+    def drain_rank(self, d: int, p: int, deadline: float = 120.0,
+                   ) -> Dict[str, float]:
+        """Proactive drain on PREEMPT_NOTICE: run the full shrink recovery —
+        verified snapshot flush, communicator edit, live remap, migration —
+        *inside* the notice window, before the preemption lands.  Detection
+        cost is zero (the scheduler told us) and up to ``deadline`` seconds
+        of recovery work overlap ongoing training."""
+        ev = ElasticEvent(EventKind.PREEMPT_NOTICE, self.step_count,
+                          (d * self.pp + p,), deadline=deadline)
+        return self.apply_plan(self.plan_event(ev), t_detect=0.0, drain=True)
+
+    def _verify_snapshot_sources(self, p: int, failed: List[int],
+                                 drain: bool = False) -> Tuple[float, int]:
+        """Online verification (paper §5.1) of the ring-snapshot shards the
+        remap is about to trust, with graceful degradation:
+
+        * checksum intact → use the shard (``verified``);
+        * corrupt + rank still draining → re-derive bit-for-bit from the
+          departing rank's device shard (``rederived``);
+        * corrupt + rank dead → rebuild the fp32 master from the replicated
+          model parameters (bit-exact: after write-back params == masters)
+          with zeroed Adam moments (``rebuilt``, counted as degraded).
+
+        Repairs land in ``pool.host`` *before* ``_live_remap_stage`` reads
+        it, so both the fast and the legacy remap paths stay untouched.
+        Returns (modeled verify seconds, degraded-shard count).
+        """
+        if not self.snapshot_enabled:
+            return 0.0, 0
+        st = self.stages[p]
+        pool = self.snapshots[p]
+        if not pool.integrity:
+            return 0.0, 0
+        t_verify, degraded = 0.0, 0
+        old_ranks = list(st.dp_ranks)
+        for f in failed:
+            j = old_ranks.index(f)
+            if pool.host[pool.holder_of(j)] is None:
+                continue    # holder dead: remap skips this source anyway
+            t_verify += pool.verify_cost_seconds(j)
+            tier, _ = pool.verify_and_repair(
+                j,
+                device_state=st.shard(f) if drain else None,
+                master_fallback=None if drain else
+                (lambda jj=j: self._master_shard_from_params(p, jj)))
+            if tier == "rebuilt":
+                degraded += 1
+        return t_verify, degraded
+
+    def _master_shard_from_params(self, p: int, j: int) -> np.ndarray:
+        """Tolerance-tier rebuild source: shard ``j`` of stage ``p``'s fp32
+        master, regenerated from the replicated model parameters (which equal
+        the masters bit-for-bit after ``_write_params_from_masters``)."""
+        st = self.stages[p]
+        vecs = [self.flattener.flatten_entry(e, self._entry_tree(e))
+                for e in st.entries]
+        full = np.concatenate(vecs) if vecs else np.zeros(0, np.float32)
+        return st.table.split(st.table.gather(full))[j]
 
     def recover_scale_out(self, d: int, p: int) -> Dict[str, float]:
         """Worker (d, p) (re)joins: communicator edit (only the new member's
@@ -511,7 +630,8 @@ class VirtualCluster:
         # dynamic rank registration: the (re)joining worker gets fresh
         # heartbeat/step-time tracking (clears any stale dead verdict, so a
         # rejoin that later fails again is re-detected)
-        self.agent.add_rank(d * self.pp + p)
+        self.agent.add_rank(d * self.pp + p, stage=p)
+        self.controller.note_join(d * self.pp + p)
         comm_stats = self.comm.apply(
             GroupDelta.grow([(g, d * self.pp + p)
                              for g in self.comm.groups

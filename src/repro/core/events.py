@@ -5,14 +5,24 @@ events), the ScheduleEngine (which *plans* around them), the VirtualCluster
 (which *executes* the plans) and the scenario engine in
 ``repro.scenarios`` (which *injects* them from declarative traces).
 
-Beyond the paper's four first-class kinds, two perturbation kinds exist for
-scenario injection:
+Beyond the paper's four first-class kinds, four further kinds exist:
 
 * ``DVFS_SET``  — an external frequency setpoint (e.g. power capping or a
                   scenario absorbing a straggler by up-clocking peers);
 * ``MIGRATE``   — a scheduler-directed layer migration between two stages,
                   used by MTTR micro-benchmarks to meter the migration path
-                  in isolation.
+                  in isolation;
+* ``PREEMPT_NOTICE`` — a scheduler *advance warning* (spot two-minute
+                  notice): the named ranks WILL be preempted ``deadline``
+                  seconds after the event step.  Liveness-wise it is a
+                  shrink (the rank is lost either way); the proactive
+                  executor drains the rank — snapshot flush + verified
+                  remap + layer migration — inside the notice window, so
+                  most of the recovery overlaps with ongoing training
+                  instead of stalling it after the fail-stop lands;
+* ``OOM_RISK``  — an Agent-emitted early warning that a rank's memory
+                  trend will cross its capacity soon.  Advisory: it alters
+                  no liveness and executors treat it as a zero-cost record.
 
 An event may name *several* ranks (``ranks`` tuple): the scenario engine
 uses this to express concurrent failure bursts, which executors apply as a
@@ -32,6 +42,8 @@ class EventKind(enum.Enum):
     SCALE_OUT = "scale_out"     # new resources granted
     DVFS_SET = "dvfs_set"       # injected frequency setpoint (perturbation)
     MIGRATE = "migrate"         # directed layer migration (perturbation)
+    PREEMPT_NOTICE = "preempt_notice"   # advance warning of a preemption
+    OOM_RISK = "oom_risk"       # agent-emitted pre-OOM early warning
 
 
 @dataclasses.dataclass(frozen=True)
@@ -45,10 +57,12 @@ class ElasticEvent:
     layers: Tuple[int, ...] = ()           # MIGRATE: layer ids to move
     src_stage: int = 0                     # MIGRATE: source stage
     dst_stage: int = 1                     # MIGRATE: destination stage
+    deadline: float = 120.0                # PREEMPT_NOTICE: seconds of warning
 
     @property
     def is_shrink(self) -> bool:
-        return self.kind in (EventKind.FAIL_STOP, EventKind.SCALE_IN)
+        return self.kind in (EventKind.FAIL_STOP, EventKind.SCALE_IN,
+                             EventKind.PREEMPT_NOTICE)
 
     @property
     def is_grow(self) -> bool:
@@ -63,6 +77,8 @@ class ElasticEvent:
         if self.kind == EventKind.MIGRATE:
             base += (f" layers={list(self.layers)} "
                      f"{self.src_stage}->{self.dst_stage}")
+        if self.kind == EventKind.PREEMPT_NOTICE:
+            base += f" deadline={self.deadline:g}s"
         return base
 
 

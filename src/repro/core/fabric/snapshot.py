@@ -20,7 +20,8 @@ under ``batched=False`` as the benchmark baseline.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+import zlib
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -32,6 +33,10 @@ from ..statespace import COMPONENTS as _COMPONENTS
 
 GRAD_BYTES = 4        # fp32 gradient shard element
 ADAM_STATE_BYTES = 12  # master + mu + nu fp32
+VERIFY_BW = 5e9        # modeled host checksum scan rate (bytes/s)
+
+#: graceful-degradation ladder for :meth:`SnapshotPool.verify_and_repair`
+INTEGRITY_TIERS = ("verified", "rederived", "rebuilt", "lost")
 
 
 @dataclasses.dataclass
@@ -54,7 +59,8 @@ class SnapshotPool:
 
     def __init__(self, n: int, adam_cfg: Optional[AdamConfig] = None,
                  d2d_bw: float = 25e9, host_flops: float = 5e10,
-                 compress: str = "none", batched: bool = True):
+                 compress: str = "none", batched: bool = True,
+                 integrity: bool = True):
         self.n = n
         self.adam = adam_cfg or AdamConfig()
         self.d2d_bw = d2d_bw
@@ -62,6 +68,7 @@ class SnapshotPool:
         assert compress in ("none", "bf16")
         self.compress = compress
         self.batched = batched
+        self.integrity = integrity
         # host[i] = snapshot of worker (i+1) % n's shard state.  On the
         # batched path these are zero-copy views into one concatenated
         # buffer per component (_cat), so the per-step host Adam update is
@@ -71,6 +78,10 @@ class SnapshotPool:
         self.stats: List[SnapshotStats] = []
         self._cat: Optional[Dict[str, np.ndarray]] = None
         self._offs: Optional[np.ndarray] = None
+        # crc[i][c] = CRC32 of holder i's copy of component c, stamped at
+        # write time (bootstrap / snapshot_step).  Recovery re-hashes and
+        # compares before trusting a shard.
+        self.crc: List[Optional[Dict[str, int]]] = [None] * n
 
     def backup_rank(self, i: int) -> int:
         """Which worker's state does worker i hold?"""
@@ -88,6 +99,7 @@ class SnapshotPool:
                             for k, v in shard_states[j].items()}
             self.snap_step[i] = step
         self._cat = None
+        self._stamp_all()
 
     def _ensure_cat(self):
         """Build (lazily) the concatenated per-component buffers the batched
@@ -135,6 +147,7 @@ class SnapshotPool:
         self._refresh_views()
         for i in range(self.n):
             self.snap_step[i] = step
+        self._stamp_all()
         stats = SnapshotStats(
             step=step,
             grad_bytes_sent=total_grad_bytes,
@@ -167,6 +180,7 @@ class SnapshotPool:
             self.host[i] = {k: np.asarray(v) for k, v in new_st.items()}
             host_flops += g.size * 12     # ~12 flops/element Adam
             self.snap_step[i] = step
+        self._stamp_all()
         stats = SnapshotStats(
             step=step,
             grad_bytes_sent=total_grad_bytes,
@@ -181,12 +195,114 @@ class SnapshotPool:
         """Simulate fail-stop of worker i: its host snapshots die with it."""
         self.host[i] = None
         self.snap_step[i] = -1
+        self.crc[i] = None
         self._cat = None    # survivors' views stay valid standalone arrays
 
     def recover_shard(self, j: int) -> Optional[Dict[str, np.ndarray]]:
         """Fetch failed worker j's state from its ring holder, if alive."""
         h = self.holder_of(j)
         return self.host[h]
+
+    # -- integrity (paper §5.1 "online verification") ----------------------
+
+    @staticmethod
+    def _checksum(state: Dict[str, np.ndarray]) -> Dict[str, int]:
+        return {c: zlib.crc32(np.ascontiguousarray(v).tobytes())
+                for c, v in state.items()}
+
+    def _stamp_all(self):
+        """Refresh write-time checksums for every live holder slot."""
+        if not self.integrity:
+            return
+        for i in range(self.n):
+            self.crc[i] = (self._checksum(self.host[i])
+                           if self.host[i] is not None else None)
+
+    def corrupt_shard(self, j: int, component: str = "master",
+                      index: int = 0):
+        """Chaos/test hook: silently flip bits in the *stored* copy of
+        worker j's snapshot (holder-side bit rot).  The write-time checksum
+        is deliberately NOT refreshed, so verification must catch it."""
+        h = self.holder_of(j)
+        st = self.host[h]
+        if st is None or st[component].size == 0:
+            return
+        arr = st[component]
+        i = index % arr.size
+        raw = arr[i:i + 1].view(np.uint32)
+        raw ^= np.uint32(0x00400000)   # flip a mantissa bit
+        # (mutates in place; on the batched path this writes through the
+        # _cat view, exactly like real bit rot in the holder's host buffer)
+
+    def verify_shard(self, j: int) -> bool:
+        """Re-hash worker j's stored snapshot against its write-time
+        checksum.  True = intact.  Raises if the shard is absent."""
+        h = self.holder_of(j)
+        st = self.host[h]
+        assert st is not None, f"no snapshot for rank {j} (holder {h} dead)"
+        if not self.integrity or self.crc[h] is None:
+            return True
+        return self._checksum(st) == self.crc[h]
+
+    def verify_cost_seconds(self, j: int) -> float:
+        """Modeled wall time of the verification scan (deterministic)."""
+        h = self.holder_of(j)
+        st = self.host[h]
+        if st is None:
+            return 0.0
+        return sum(v.nbytes for v in st.values()) / VERIFY_BW
+
+    def verify_and_repair(
+        self, j: int,
+        device_state: Optional[Dict[str, np.ndarray]] = None,
+        master_fallback: Optional[Callable[[], np.ndarray]] = None,
+    ) -> Tuple[str, Optional[Dict[str, np.ndarray]]]:
+        """Online verification with graceful degradation (INTEGRITY_TIERS).
+
+        Returns ``(tier, state)``:
+
+        * ``verified``  — checksum matches; the stored shard is trusted.
+        * ``rederived`` — checksum failed but worker j is still alive
+          (``device_state`` given, e.g. a proactive drain): the snapshot is
+          re-copied bit-for-bit from the device and re-stamped.
+        * ``rebuilt``   — checksum failed and the device copy is gone:
+          the fp32 master is regenerated from ``master_fallback()`` (the
+          replicated model parameters — bit-exact, since after write-back
+          params == masters) with **zeroed** Adam moments.  Degraded: one
+          optimizer step of momentum history is lost for this shard only.
+        * ``lost``      — no repair source; caller must treat the shard as
+          unrecoverable.
+
+        Repairs write standalone arrays into the holder slot (detaching it
+        from any batched ``_cat`` buffer) and refresh the checksum.
+        """
+        h = self.holder_of(j)
+        st = self.host[h]
+        if st is None:
+            return "lost", None
+        if self.verify_shard(j):
+            return "verified", st
+        if device_state is not None:
+            repaired = {c: np.array(v, dtype=np.float32)
+                        for c, v in device_state.items()}
+            self._install_repair(h, repaired)
+            return "rederived", self.host[h]
+        if master_fallback is not None:
+            master = np.asarray(master_fallback(), dtype=np.float32).ravel()
+            repaired = {"master": np.array(master),
+                        "mu": np.zeros_like(master),
+                        "nu": np.zeros_like(master)}
+            self._install_repair(h, repaired)
+            return "rebuilt", self.host[h]
+        return "lost", None
+
+    def _install_repair(self, holder: int, state: Dict[str, np.ndarray]):
+        # Detach every slot from the shared _cat before replacing one slot's
+        # arrays, mirroring lose_rank(): views of survivors stay valid.
+        self._cat = None
+        self.host[holder] = state
+        if self.integrity:
+            self.crc[holder] = self._checksum(state)
 
     def critical_path_overhead(self) -> float:
         """Fraction of snapshot work NOT hidden (Fig. 6b: ~0; small launch

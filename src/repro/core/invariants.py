@@ -318,7 +318,8 @@ class MttrBoundChecker(InvariantChecker):
 
     def after_cluster_event(self, step, event, cluster, record):
         parts = sum(record.get(k, 0.0) for k in
-                    ("detect", "plan", "communicator", "remap", "migration"))
+                    ("detect", "plan", "communicator", "remap", "migration",
+                     "verify"))
         if abs(record.get("total", 0.0) - parts) > 1e-9:
             self.fail(f"step {step} {event.describe()}: MTTR total "
                       f"{record.get('total')!r} != sum of itemized phases "

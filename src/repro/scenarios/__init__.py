@@ -13,8 +13,10 @@ Quick use::
 """
 from repro.core.clusterview import ClusterView, FailureDomainMap, GroupDelta
 
-from .fuzz import (FuzzCase, POLICY_NAMES, make_analytic_case, make_case,
-                   make_cluster_case, make_policy, run_case, shrink_case,
+from .fuzz import (CHAOS_CLASSES, ChaosCase, DetectionChaosRunner, FuzzCase,
+                   POLICY_NAMES, make_analytic_case, make_case,
+                   make_chaos_case, make_cluster_case, make_policy, run_case,
+                   run_chaos_case, run_detector_chaos, shrink_case,
                    trace_is_legal)
 from .library import SCENARIOS, get_scenario
 from .metrics import MetricsCollector, ScenarioResult
@@ -25,11 +27,13 @@ from .spec import (AnalyticWorkload, ClusterWorkload, Scenario,
                    node_shrink_cells, validate_event_legality)
 
 __all__ = [
-    "AnalyticScenarioRunner", "AnalyticWorkload", "ClusterScenarioRunner",
-    "ClusterView", "ClusterWorkload", "FailureDomainMap", "FuzzCase",
-    "GroupDelta", "MetricsCollector", "POLICY_NAMES", "SCENARIOS", "Scenario",
+    "AnalyticScenarioRunner", "AnalyticWorkload", "CHAOS_CLASSES",
+    "ChaosCase", "ClusterScenarioRunner", "ClusterView", "ClusterWorkload",
+    "DetectionChaosRunner", "FailureDomainMap", "FuzzCase", "GroupDelta",
+    "MetricsCollector", "POLICY_NAMES", "SCENARIOS", "Scenario",
     "ScenarioResult", "ServeScenarioRunner", "ServeWorkload", "get_scenario",
-    "make_analytic_case", "make_case", "make_cluster_case", "make_policy",
-    "node_shrink_cells", "run_case", "run_scenario", "run_serve_scenario",
-    "shrink_case", "trace_is_legal", "validate_event_legality",
+    "make_analytic_case", "make_case", "make_chaos_case", "make_cluster_case",
+    "make_policy", "node_shrink_cells", "run_case", "run_chaos_case",
+    "run_detector_chaos", "run_scenario", "run_serve_scenario", "shrink_case",
+    "trace_is_legal", "validate_event_legality",
 ]

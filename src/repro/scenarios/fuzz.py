@@ -25,7 +25,7 @@ from __future__ import annotations
 
 import dataclasses
 import random
-from typing import Callable, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.cost_model import HardwareSpec
 from repro.core.events import ElasticEvent, EventKind, burst
@@ -192,6 +192,27 @@ def shrink_regrow(max_gap: int = 3) -> EventStrategy:
     return EventStrategy("shrink_regrow", fn)
 
 
+def preempt(max_ranks: int = 2,
+            deadlines: Tuple[float, ...] = (0.05, 2.0, 120.0)
+            ) -> EventStrategy:
+    """Preemption *notice*: liveness-wise a shrink, but the executor drains
+    the ranks proactively inside the (randomly short or generous) deadline
+    window instead of paying the detection + full-stall path."""
+    def fn(rnd, st, step):
+        picked: set = set()
+        for _ in range(rnd.randint(1, max_ranks)):
+            pool = st.killable(picked)
+            if not pool:
+                break
+            picked.add(rnd.choice(pool))
+        if not picked:
+            return None
+        st.dead |= picked
+        return [burst(EventKind.PREEMPT_NOTICE, step, tuple(picked),
+                      deadline=rnd.choice(deadlines))]
+    return EventStrategy("preempt", fn, weight=0.8)
+
+
 def migrate(num_layers: int, pp: int) -> EventStrategy:
     """Directed layer migration between two distinct stages (analytic-only:
     the numeric executor treats MIGRATE as a planner-internal action)."""
@@ -289,14 +310,15 @@ def draw_cluster_workload(rnd: random.Random) -> ClusterWorkload:
 def default_analytic_strategies(w: AnalyticWorkload) -> List[EventStrategy]:
     return [failstop_burst(), rejoin(), fail_slow(), dvfs_set(),
             shrink_regrow(), migrate(w.cfg.num_layers, w.pp),
-            domain_burst(w.domains)]
+            domain_burst(w.domains), preempt()]
 
 
 def default_cluster_strategies() -> List[EventStrategy]:
     """No MIGRATE (numeric executor rejects direct injection) and no domain
     bursts (cluster grids are too small for whole-domain kills)."""
     return [failstop_burst(max_ranks=2), rejoin(max_ranks=2),
-            fail_slow(factors=(1.5, 2.0)), dvfs_set(), shrink_regrow()]
+            fail_slow(factors=(1.5, 2.0)), dvfs_set(), shrink_regrow(),
+            preempt(max_ranks=1)]
 
 
 # ---------------------------------------------------------------------------
@@ -341,11 +363,13 @@ def make_cluster_case(seed: int) -> FuzzCase:
                     w)
 
 
-def make_case(mode: str, seed: int) -> FuzzCase:
+def make_case(mode: str, seed: int):
     if mode == "analytic":
         return make_analytic_case(seed)
     if mode == "cluster":
         return make_cluster_case(seed)
+    if mode == "chaos":
+        return make_chaos_case(seed)
     raise ValueError(f"unknown fuzz mode {mode!r}")
 
 
@@ -421,3 +445,385 @@ def shrink_case(case: FuzzCase,
                 progress = True
                 break
     return current
+
+
+# ---------------------------------------------------------------------------
+# detection chaos: the four guarantees under IMPERFECT detection
+# ---------------------------------------------------------------------------
+# The trace fuzzer above injects *perfectly detected* events.  The chaos
+# layer instead perturbs the detection plane itself — probes are dropped,
+# delayed, duplicated, reordered, and flapped; snapshot shards are silently
+# corrupted — and lets the ElasticController decide what happened.  The
+# checked property set grows by one: on top of the four paper invariants, a
+# false-positive eviction must never be PERMANENT (the falsely-evicted rank
+# resurrects through the normal SCALE_OUT path once its heartbeats reappear)
+# and every truly-dead rank must still be evicted.
+#
+# Three chaos classes (drawn from the seed):
+#
+# * ``flap_only`` — no real failures at all; every eviction the controller
+#   commits is by definition a false positive and must be healed by the end
+#   of the settle window.  Runs under the FULL four-checker stack (the
+#   bit-exact parameter twin receives the identical event sequence, so even
+#   a false eviction + rejoin must keep state bit-identical).
+# * ``mixed``    — real kills and preemption notices interleaved with probe
+#   chaos; the controller must evict the dead, drain the doomed, and heal
+#   everything else.
+# * ``corrupt``  — snapshot shards are bit-flipped at the recovery read
+#   point: drains re-derive bit-for-bit from the departing device;
+#   detected failures degrade to the tolerance-tier master rebuild
+#   (``degraded`` recorded).  The parameter twin is dropped (a rebuilt
+#   shard legitimately differs by its zeroed Adam moments); dataflow / RNG /
+#   MTTR invariants still run.
+
+CHAOS_CLASSES = ("flap_only", "mixed", "corrupt")
+
+
+@dataclasses.dataclass(frozen=True)
+class ChaosAction:
+    """One ground-truth action of a chaos schedule (what REALLY happened,
+    regardless of what the perturbed probes make it look like)."""
+    step: int
+    kind: str           # kill | notice | mem | corrupt_kill | corrupt_drain
+    rank: int
+    deadline: float = 120.0
+    component: str = "master"
+    value: float = 0.0  # mem: reported used fraction
+
+
+@dataclasses.dataclass
+class ChaosCase:
+    """A fully-reproducible detection-chaos input: seed -> (workload,
+    ground-truth schedule, chaos class).  Probe perturbations are drawn at
+    run time from a seed-derived stream, so a seed is a complete repro."""
+    seed: int
+    chaos_class: str
+    workload: ClusterWorkload
+    actions: Tuple[ChaosAction, ...]
+    horizon: int
+    mode: str = "chaos"
+
+    @property
+    def scenario(self) -> Scenario:     # for artifact/shrink tooling parity
+        return Scenario(f"fuzz-chaos-{self.seed}", (), self.horizon,
+                        description=f"chaos class {self.chaos_class}")
+
+    def repro(self, policy=None) -> str:
+        return (f"PYTHONPATH=src python -m benchmarks.fuzz_soak "
+                f"--mode chaos --seed {self.seed}")
+
+
+def make_chaos_case(seed: int) -> ChaosCase:
+    rnd = random.Random(f"chaos-{seed}")
+    chaos_class = rnd.choice(("flap_only", "flap_only", "mixed", "mixed",
+                              "corrupt"))
+    pp = rnd.choice((1, 2))
+    dp = 3                      # real kills leave >= 2, false positives >= 1
+    num_micro = rnd.choice((1, 2))
+    w = ClusterWorkload(family="dense", num_layers=2 * pp, dropout_rate=0.0,
+                        dp=dp, pp=pp, global_batch=dp * num_micro,
+                        num_micro=num_micro, seq_len=8,
+                        seed=rnd.randrange(10 ** 6))
+    horizon = rnd.randint(4, 6)
+    actions: List[ChaosAction] = []
+    removed = {p: 0 for p in range(pp)}     # truth removals per stage
+
+    def pick_rank():
+        pool = [r for r in range(dp * pp)
+                if removed[r % pp] < dp - 1
+                and all(a.rank != r for a in actions)]
+        return rnd.choice(pool) if pool else None
+
+    if chaos_class == "mixed":
+        for kind in ("kill", "notice"):
+            if kind == "notice" and rnd.random() < 0.4:
+                continue
+            r = pick_rank()
+            if r is None:
+                continue
+            removed[r % pp] += 1
+            actions.append(ChaosAction(step=rnd.randint(1, horizon - 1),
+                                       kind=kind, rank=r,
+                                       deadline=rnd.choice((0.05, 120.0))))
+        if rnd.random() < 0.7:              # an OOM ramp on a live rank
+            live = [r for r in range(dp * pp)
+                    if all(a.rank != r for a in actions)]
+            r = rnd.choice(live)
+            for i, frac in enumerate((0.5, 0.7, 0.85, 0.97)):
+                if i >= horizon:
+                    break
+                actions.append(ChaosAction(step=i, kind="mem", rank=r,
+                                           value=frac))
+    elif chaos_class == "corrupt":
+        for _ in range(rnd.randint(1, 2)):
+            r = pick_rank()
+            if r is None:
+                break
+            removed[r % pp] += 1
+            actions.append(ChaosAction(
+                step=rnd.randint(1, horizon - 1),
+                kind=rnd.choice(("corrupt_kill", "corrupt_drain")),
+                rank=r, component=rnd.choice(("master", "mu", "nu"))))
+    return ChaosCase(seed, chaos_class, w, tuple(actions), horizon)
+
+
+class DetectionChaosRunner:
+    """Drive a VirtualCluster through a chaos case: ground-truth actions
+    mutate reality, perturbed probes feed the ElasticController, and
+    whatever the controller decides is executed — then the settle window
+    must heal every false verdict.
+
+    Probe perturbation knobs (drawn per case): drop, duplicate, one-round
+    delay, reorder, and flap (a live rank's heartbeat reads false)."""
+
+    def __init__(self, case: ChaosCase, checkers=None):
+        self.case = case
+        self.workload = case.workload
+        if checkers is None:
+            checkers = default_cluster_checkers()
+            if case.chaos_class == "corrupt":
+                checkers = [c for c in checkers
+                            if c.name != "parameter-consistency"]
+        self.checkers = checkers
+
+    # -- probe synthesis ---------------------------------------------------
+    def _probes(self, cl, rnd, truth_dead, delayed, chaotic,
+                p_flap, p_drop, p_dup, p_delay):
+        """Truthful probes for every grid rank (dead ranks are silent;
+        unregistered-but-alive ranks still probe, feeding resurrection),
+        perturbed when ``chaotic``."""
+        from repro.core.agent import Probe
+        base_t = 0.1
+        out = list(delayed)
+        delayed.clear()
+        for rank in range(cl.dp0 * cl.pp):
+            if rank in truth_dead:
+                continue                      # the dead emit nothing
+            hb = True
+            if chaotic and rnd.random() < p_flap:
+                hb = False                    # transient blip
+            p = Probe(cl.step_count, rank, heartbeat=hb,
+                      step_seconds=base_t,
+                      mem_used=float(cl.mem_used[rank // cl.pp,
+                                                 rank % cl.pp]))
+            if chaotic and rnd.random() < p_drop:
+                continue                      # lost on the wire
+            if chaotic and rnd.random() < p_delay:
+                delayed.append(p)             # arrives next round, stale
+                continue
+            out.append(p)
+            if chaotic and rnd.random() < p_dup:
+                out.append(Probe(p.step, p.rank, p.heartbeat,
+                                 p.step_seconds, p.mem_used))
+        if chaotic:
+            rnd.shuffle(out)                  # reordered delivery
+        return out
+
+    # -- main loop ---------------------------------------------------------
+    def run(self):
+        case = self.case
+        cl = self.workload.make_cluster()
+        rnd = random.Random(f"chaos-exec-{case.seed}")
+        p_flap = rnd.uniform(0.05, 0.3)
+        p_drop = rnd.uniform(0.0, 0.2)
+        p_dup = rnd.uniform(0.0, 0.3)
+        p_delay = rnd.uniform(0.0, 0.15)
+        for c in self.checkers:
+            c.on_cluster_start(self, cl)
+        truth_dead: set = set()
+        delayed: List = []
+        expected_degraded = 0
+        got_degraded = 0
+        by_step: Dict[int, List[ChaosAction]] = {}
+        for a in case.actions:
+            by_step.setdefault(a.step, []).append(a)
+
+        def apply_ev(ev):
+            nonlocal got_degraded
+            rec = cl.apply_event(ev)
+            got_degraded += int(rec.get("degraded", 0))
+            for c in self.checkers:
+                c.after_cluster_event(cl.step_count, ev, cl, rec)
+            return rec
+
+        def cell(rank):
+            return rank // cl.pp, rank % cl.pp
+
+        step = 0
+        settle_left = None
+        while True:
+            chaotic = step < case.horizon
+            for act in by_step.get(step, ()):   # ground truth mutates reality
+                d, p = cell(act.rank)
+                if act.kind == "kill":
+                    truth_dead.add(act.rank)
+                elif act.kind == "mem":
+                    cl.inject_mem_pressure(d, p, act.value)
+                elif act.kind in ("notice", "corrupt_kill", "corrupt_drain"):
+                    if act.kind.startswith("corrupt"):
+                        # bit rot at the recovery read point: corrupt the
+                        # holder's stored copy of this rank's shard (shard
+                        # index = position in the stage's surviving group)
+                        j = cl.stages[p].dp_ranks.index(d)
+                        cl.snapshots[p].corrupt_shard(j, act.component)
+                    if act.kind == "corrupt_kill":
+                        truth_dead.add(act.rank)
+                        expected_degraded += 1
+                        apply_ev(ElasticEvent(EventKind.FAIL_STOP,
+                                              cl.step_count, (act.rank,)))
+                    else:                       # notice / corrupt_drain
+                        truth_dead.add(act.rank)
+                        apply_ev(ElasticEvent(EventKind.PREEMPT_NOTICE,
+                                              cl.step_count, (act.rank,),
+                                              deadline=act.deadline))
+            probes = self._probes(cl, rnd, truth_dead, delayed, chaotic,
+                                  p_flap, p_drop, p_dup, p_delay)
+            events = cl.controller.observe(probes)
+            for ev in events:
+                apply_ev(ev)
+            loss = cl.train_step()
+            for c in self.checkers:
+                c.after_cluster_step(cl.step_count - 1, cl, loss)
+            step += 1
+            if step >= case.horizon:
+                if settle_left is None:         # size the settle window once
+                    settle_left = cl.agent.max_confirm_misses() + 4
+                else:
+                    settle_left -= 1
+                stable = (not events
+                          and all(h.state.value == "healthy"
+                                  for h in cl.agent.health.values())
+                          and self._grid_matches_truth(cl, truth_dead))
+                if stable or settle_left <= 0:
+                    break
+        self._final_asserts(cl, truth_dead, expected_degraded, got_degraded)
+        return cl
+
+    @staticmethod
+    def _grid_matches_truth(cl, truth_dead) -> bool:
+        for rank in range(cl.dp0 * cl.pp):
+            d, p = rank // cl.pp, rank % cl.pp
+            if bool(cl.alive[d, p]) != (rank not in truth_dead):
+                return False
+        return True
+
+    def _final_asserts(self, cl, truth_dead, expected_degraded,
+                       got_degraded):
+        falsely_evicted = []
+        missed_evictions = []
+        for rank in range(cl.dp0 * cl.pp):
+            d, p = rank // cl.pp, rank % cl.pp
+            if rank in truth_dead:
+                if bool(cl.alive[d, p]) or rank in cl.agent.times:
+                    missed_evictions.append(rank)
+            else:
+                if not bool(cl.alive[d, p]) or rank not in cl.agent.times:
+                    falsely_evicted.append(rank)
+        if falsely_evicted:
+            raise InvariantViolation(
+                f"[detection-chaos] class {self.case.chaos_class}: ranks "
+                f"{falsely_evicted} are PERMANENTLY evicted although their "
+                f"workers are alive (false positive not healed by "
+                f"resurrection)")
+        if missed_evictions:
+            raise InvariantViolation(
+                f"[detection-chaos] class {self.case.chaos_class}: dead "
+                f"ranks {missed_evictions} were never evicted")
+        if got_degraded != expected_degraded:
+            raise InvariantViolation(
+                f"[detection-chaos] class {self.case.chaos_class}: expected "
+                f"{expected_degraded} tolerance-tier (degraded) shard "
+                f"rebuilds, recovery records show {got_degraded}")
+        import numpy as _np
+        if not all(_np.isfinite(l) for l in cl.losses):
+            raise InvariantViolation(
+                f"[detection-chaos] class {self.case.chaos_class}: "
+                f"non-finite loss after chaotic recovery")
+
+
+def run_chaos_case(case: ChaosCase, checkers=None):
+    """Run one detection-chaos case; violations carry the one-line repro."""
+    try:
+        return DetectionChaosRunner(case, checkers=checkers).run()
+    except InvariantViolation as e:
+        raise InvariantViolation(
+            f"{e}\n  chaos seed {case.seed} ({case.chaos_class}); reproduce "
+            f"with:\n  {case.repro()}") from e
+
+
+# ---------------------------------------------------------------------------
+# detector-level chaos sweep (no cluster: pure control-plane, sub-ms/seed)
+# ---------------------------------------------------------------------------
+def run_detector_chaos(seed: int) -> None:
+    """Property check of Agent + ElasticController alone under probe chaos —
+    no numerics, so hundreds of seeds cost milliseconds.  A membership shim
+    plays the executor: FAIL_STOP unregisters the rank, SCALE_OUT
+    re-registers it.  Asserts: no permanent false evictions, every
+    truly-dead rank confirmed, stuck grants recovered.  Raises
+    ``AssertionError`` (with the seed) on violation."""
+    from repro.core.agent import Agent, Probe
+    from repro.core.controller import ElasticController
+    rnd = random.Random(f"detchaos-{seed}")
+    pp = rnd.choice((1, 2, 3))
+    dp = rnd.randint(2, 4)
+    n = dp * pp
+    agent = Agent(n, miss_limit=2, stage_of={r: r % pp for r in range(n)})
+    ctl = ElasticController(agent, grant_timeout=4)
+    flap_only = rnd.random() < 0.5
+    truth_dead: set = set()
+    horizon = rnd.randint(8, 16)
+    p_flap = rnd.uniform(0.1, 0.4)
+    p_drop = rnd.uniform(0.0, 0.25)
+    p_dup = rnd.uniform(0.0, 0.3)
+    stuck_rank = None
+    if rnd.random() < 0.3:                  # a grant that never joins
+        stuck_rank = n + 7
+        ctl.grant(stuck_rank, "phantom capacity")
+
+    def observe(chaotic: bool):
+        probes = []
+        for r in range(n):
+            if r in truth_dead:
+                continue
+            hb = not (chaotic and rnd.random() < p_flap)
+            if chaotic and rnd.random() < p_drop:
+                continue
+            probes.append(Probe(0, r, hb, 0.1))
+            if chaotic and rnd.random() < p_dup:
+                probes.append(Probe(0, r, hb, 0.1))
+        if chaotic:
+            rnd.shuffle(probes)
+        for ev in ctl.observe(probes):
+            if ev.kind == EventKind.FAIL_STOP:
+                for r in ev.ranks:
+                    agent.remove_rank(r)
+            elif ev.kind == EventKind.SCALE_OUT:
+                for r in ev.ranks:
+                    agent.add_rank(r, stage=r % pp)
+                    ctl.note_join(r)
+
+    for step in range(horizon):
+        if not flap_only and rnd.random() < 0.15:
+            # a real kill that keeps the stage non-empty in truth
+            pool = [r for r in range(n) if r not in truth_dead
+                    and sum(1 for q in range(n)
+                            if q % pp == r % pp and q not in truth_dead) >= 2]
+            if pool:
+                truth_dead.add(rnd.choice(pool))
+        observe(chaotic=True)
+    for _ in range(agent.max_confirm_misses() + 2):     # settle: clean probes
+        observe(chaotic=False)
+
+    alive_regs = set(agent.ranks)
+    false_perm = [r for r in range(n)
+                  if r not in truth_dead and r not in alive_regs]
+    assert not false_perm, \
+        (f"detector-chaos seed {seed}: permanent false eviction of {false_perm}"
+         f" ({'flap-only' if flap_only else 'mixed'} trace)")
+    missed = [r for r in truth_dead if r in alive_regs]
+    assert not missed, \
+        f"detector-chaos seed {seed}: dead ranks {missed} never evicted"
+    if stuck_rank is not None:
+        assert any(g.rank == stuck_rank for g in ctl.stuck_grants()), \
+            (f"detector-chaos seed {seed}: granted-but-never-joined rank "
+             f"{stuck_rank} was not recovered as a stuck grant")

@@ -58,6 +58,19 @@ def cascading_failslow() -> Tuple[Scenario, ClusterWorkload]:
     return scn, w
 
 
+def preempt_drain() -> Tuple[Scenario, ClusterWorkload]:
+    """Spot preemption with a two-minute notice: the named rank is drained
+    proactively (verified snapshot flush + remap inside the window) and the
+    instance rejoins later.  ``Scenario.reactive_twin()`` of this trace is
+    the fail-stop baseline ``benchmarks/proactive_mttr.py`` diffs against."""
+    w = ClusterWorkload(dp=3, pp=2, global_batch=12, num_micro=2,
+                        dropout_rate=0.0)
+    scn = Scenario.preempt_notice("preempt_drain", step=2,
+                                  ranks=(w.rank(1, 0),), horizon=8,
+                                  deadline=120.0, rejoin_step=6)
+    return scn, w
+
+
 def single_failstop() -> Tuple[Scenario, ClusterWorkload]:
     w = ClusterWorkload()
     scn = Scenario.single("single_failstop", EventKind.FAIL_STOP, step=3,
@@ -76,6 +89,7 @@ SCENARIOS: Dict[str, Callable[[], Tuple[Scenario, ClusterWorkload]]] = {
     "concurrent_burst": concurrent_burst,
     "shrink_regrow": shrink_regrow,
     "cascading_failslow": cascading_failslow,
+    "preempt_drain": preempt_drain,
     "single_failstop": single_failstop,
     "single_failslow": single_failslow,
 }

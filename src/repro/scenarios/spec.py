@@ -307,6 +307,36 @@ class Scenario:
                         description="capacity-trace replay (seconds horizon)")
 
     @staticmethod
+    def preempt_notice(name: str, step: int, ranks: Sequence[int],
+                       horizon: int, deadline: float = 120.0,
+                       rejoin_step: Optional[int] = None) -> "Scenario":
+        """Spot-style preemption with advance warning: the scheduler notifies
+        at ``step`` and the ranks are drained proactively inside the
+        ``deadline``-second window.  ``rejoin_step`` optionally brings the
+        capacity back (preempted instances often return)."""
+        evs: List[ElasticEvent] = [
+            burst(EventKind.PREEMPT_NOTICE, step, tuple(ranks),
+                  deadline=deadline, detail=f"{deadline:g}s notice")]
+        if rejoin_step is not None:
+            evs.append(burst(EventKind.SCALE_OUT, rejoin_step, tuple(ranks),
+                             detail="preempted capacity returned"))
+        return Scenario(name, tuple(evs), horizon,
+                        description="preemption notice with proactive drain")
+
+    def reactive_twin(self) -> "Scenario":
+        """The reactive baseline of this scenario: every PREEMPT_NOTICE
+        becomes a plain FAIL_STOP at the same step — the preemption lands and
+        is *detected* instead of drained.  Everything else is unchanged, so
+        (proactive MTTR) - (twin MTTR) isolates what the notice window buys."""
+        evs = tuple(
+            dataclasses.replace(e, kind=EventKind.FAIL_STOP,
+                                detail=e.detail + " (reactive baseline)")
+            if e.kind == EventKind.PREEMPT_NOTICE else e
+            for e in self.events)
+        return Scenario(self.name + "-reactive", evs, self.horizon,
+                        description=self.description + " [reactive baseline]")
+
+    @staticmethod
     def migration_probe(name: str, probes: Sequence[Tuple[int, ...]],
                         src: int = 0, dst: int = 1) -> "Scenario":
         """One MIGRATE event per probe (a tuple of layer ids), one step

@@ -1,0 +1,227 @@
+"""Hardened detection (Agent state machine) + ElasticController policy."""
+import numpy as np
+import pytest
+
+from repro.core.agent import Agent, HealthState, Probe
+from repro.core.controller import ElasticController
+from repro.core.events import EventKind
+
+
+def probes(step, alive, times=None, mem=None, n=4):
+    times = times or {}
+    mem = mem or {}
+    return [Probe(step, r, heartbeat=(r in alive),
+                  step_seconds=times.get(r, 0.1),
+                  mem_used=mem.get(r, 0.0))
+            for r in range(n)]
+
+
+class TestSuspicionStateMachine:
+    def test_healthy_suspect_confirmed(self):
+        ag = Agent(num_ranks=4, miss_limit=2)
+        assert ag.state_of(3) is HealthState.HEALTHY
+        evs = ag.observe(probes(0, alive={0, 1, 2}))
+        assert evs == [] and ag.state_of(3) is HealthState.SUSPECT
+        evs = ag.observe(probes(1, alive={0, 1, 2}))
+        assert [e.kind for e in evs] == [EventKind.FAIL_STOP]
+        assert evs[0].ranks == (3,)
+        assert ag.state_of(3) is HealthState.CONFIRMED
+        assert 3 in ag.reported_dead
+
+    def test_confirmed_reported_once(self):
+        ag = Agent(num_ranks=2, miss_limit=1)
+        assert len(ag.observe(probes(0, alive={0}, n=2))) == 1
+        assert ag.observe(probes(1, alive={0}, n=2)) == []
+
+    def test_heartbeat_resets_suspicion(self):
+        ag = Agent(num_ranks=2, miss_limit=3)
+        ag.observe(probes(0, alive={0}, n=2))
+        ag.observe(probes(1, alive={0}, n=2))
+        assert ag.health[1].consecutive_misses == 2
+        ag.observe(probes(2, alive={0, 1}, n=2))
+        assert ag.state_of(1) is HealthState.HEALTHY
+        assert ag.health[1].consecutive_misses == 0
+
+    def test_flap_backoff_doubles_threshold(self):
+        ag = Agent(num_ranks=2, miss_limit=2, backoff_cap=3)
+        assert ag.confirm_needed(1) == 2
+        ag.observe(probes(0, alive={0}, n=2))          # miss -> SUSPECT
+        ag.observe(probes(1, alive={0, 1}, n=2))       # beat while SUSPECT
+        assert ag.health[1].flaps == 1
+        assert ag.confirm_needed(1) == 4               # doubled
+        # a flapping rank now needs 4 consecutive misses, not 2
+        for s in range(3):
+            assert ag.observe(probes(2 + s, alive={0}, n=2)) == []
+        evs = ag.observe(probes(5, alive={0}, n=2))
+        assert [e.kind for e in evs] == [EventKind.FAIL_STOP]
+
+    def test_backoff_is_capped(self):
+        ag = Agent(num_ranks=2, miss_limit=2, backoff_cap=2)
+        for s in range(10):                            # 10 flap cycles
+            ag.observe(probes(2 * s, alive={0}, n=2))
+            ag.observe(probes(2 * s + 1, alive={0, 1}, n=2))
+        assert ag.confirm_needed(1) == 2 * 2 ** 2
+        assert ag.max_confirm_misses() == 8
+
+    def test_duplicate_and_reordered_probes_harmless(self):
+        """Any surviving heartbeat copy counts as life, regardless of order."""
+        ag = Agent(num_ranks=2, miss_limit=1)
+        ps = probes(0, alive={0, 1}, n=2)
+        dead_dup = Probe(0, 1, heartbeat=False, step_seconds=0.1)
+        assert ag.observe([dead_dup] + ps + [dead_dup]) == []
+        assert ag.state_of(1) is HealthState.HEALTHY
+
+
+class TestStagePeerFailSlow:
+    def test_slow_vs_stage_peers_only(self):
+        """Stage 1 is legitimately 2x slower than stage 0: no false positive;
+        a genuine straggler within stage 0 still fires."""
+        stage_of = {0: 0, 1: 0, 2: 0, 3: 1, 4: 1, 5: 1}
+        ag = Agent(num_ranks=6, window=4, slow_threshold=1.3,
+                   stage_of=stage_of)
+        t = {0: 0.1, 1: 0.1, 2: 0.1, 3: 0.2, 4: 0.2, 5: 0.2}
+        for s in range(4):
+            evs = ag.observe(probes(s, alive=set(range(6)), times=t, n=6))
+        assert evs == []                    # inter-stage skew tolerated
+        t[2] = 0.3                          # 3x its stage-0 peers
+        for s in range(4, 9):
+            evs = ag.observe(probes(s, alive=set(range(6)), times=t, n=6))
+            if evs:
+                break
+        assert [e.kind for e in evs] == [EventKind.FAIL_SLOW]
+        assert evs[0].ranks == (2,)
+        # fires as soon as the rolling median crosses the threshold (the
+        # window still mixes pre-degradation samples, so factor < full 3x)
+        assert evs[0].slow_factor > 1.3
+
+    def test_clear_slow_rearms_detection(self):
+        """DVFS round-trip: detect, absorb (clear_slow), re-detect."""
+        ag = Agent(num_ranks=4, window=4, slow_threshold=1.3)
+        t = {r: 0.1 for r in range(4)}
+        t[1] = 0.2
+        fired = []
+        for s in range(8):
+            fired += ag.observe(probes(s, alive=set(range(4)), times=t))
+        assert len(fired) == 1 and fired[0].ranks == (1,)
+        ag.clear_slow(1)                    # executor absorbed via DVFS
+        fired2 = []
+        for s in range(8, 16):
+            fired2 += ag.observe(probes(s, alive=set(range(4)), times=t))
+        assert len(fired2) == 1 and fired2[0].kind == EventKind.FAIL_SLOW
+
+
+class TestOomEarlyWarning:
+    def test_trend_projection_fires_before_limit(self):
+        ag = Agent(num_ranks=2, mem_cap=1.0, mem_threshold=0.9,
+                   mem_horizon=3)
+        evs = []
+        for s, frac in enumerate((0.5, 0.6, 0.7, 0.8)):
+            evs += ag.observe(probes(s, alive={0, 1}, mem={1: frac}, n=2))
+        oom = [e for e in evs if e.kind == EventKind.OOM_RISK]
+        # 0.8 + 0.1/obs * 3 obs = 1.1 >= 0.9: warned while only at 80%
+        assert len(oom) == 1 and oom[0].ranks == (1,)
+
+    def test_rearmed_after_pressure_recedes(self):
+        ag = Agent(num_ranks=2, mem_cap=1.0, mem_threshold=0.9,
+                   mem_horizon=3, window=4)
+        ramp = (0.5, 0.7, 0.9, 0.4, 0.3, 0.3, 0.3, 0.5, 0.7, 0.9)
+        kinds = []
+        for s, frac in enumerate(ramp):
+            kinds += [e.kind for e in
+                      ag.observe(probes(s, alive={0, 1}, mem={1: frac}, n=2))]
+        # fired on the first ramp, re-armed by the dip, fired on the second
+        assert kinds.count(EventKind.OOM_RISK) == 2
+
+    def test_flat_high_usage_no_spam(self):
+        ag = Agent(num_ranks=2, mem_cap=1.0, mem_threshold=0.9)
+        n_oom = 0
+        for s in range(6):
+            n_oom += sum(e.kind == EventKind.OOM_RISK for e in
+                         ag.observe(probes(s, alive={0, 1}, mem={1: 0.95},
+                                           n=2)))
+        assert n_oom == 1                   # advisory once, not every round
+
+
+class TestElasticController:
+    def _mk(self, n=4, pp=2, **kw):
+        ag = Agent(n, miss_limit=2, stage_of={r: r % pp for r in range(n)})
+        return ag, ElasticController(ag, **kw)
+
+    def test_forwards_confirmed_evictions(self):
+        ag, ctl = self._mk()
+        evs = []
+        for s in range(ag.max_confirm_misses()):
+            evs += ctl.observe(probes(s, alive={0, 1, 2}))
+        assert [e.kind for e in evs] == [EventKind.FAIL_STOP]
+
+    def test_vetoes_last_rank_of_stage(self):
+        """Stage 1's only registered rank can never be confirm-evicted."""
+        ag, ctl = self._mk(n=4, pp=2)
+        ag.remove_rank(1)                   # stage 1 now only has rank 3
+        evs = []
+        for s in range(4 * ag.max_confirm_misses()):
+            evs += ctl.observe(probes(s, alive={0, 2}))
+        assert evs == []
+        assert ag.state_of(3) is HealthState.SUSPECT    # rolled back
+        assert 3 not in ag.reported_dead
+
+    def test_vetoed_eviction_proceeds_once_peer_joins(self):
+        ag, ctl = self._mk(n=4, pp=2)
+        ag.remove_rank(1)
+        for s in range(3):
+            assert ctl.observe(probes(s, alive={0, 2})) == []
+        ag.add_rank(1, stage=1)             # replacement capacity arrives
+        ctl.note_join(1)
+        evs = []
+        for s in range(3, 3 + ag.max_confirm_misses()):
+            evs += ctl.observe(probes(s, alive={0, 1, 2}))
+        dead = [e for e in evs if e.kind == EventKind.FAIL_STOP]
+        assert len(dead) == 1 and dead[0].ranks == (3,)
+
+    def test_resurrection_after_false_positive(self):
+        ag, ctl = self._mk()
+        evs = []
+        for s in range(ag.max_confirm_misses()):
+            evs += ctl.observe(probes(s, alive={0, 1, 2}))
+        assert [e.kind for e in evs] == [EventKind.FAIL_STOP]
+        ag.remove_rank(3)                   # executor applies the eviction
+        # the "dead" rank heartbeats again: controller asks for a rejoin
+        evs = ctl.observe(probes(10, alive={0, 1, 2, 3}))
+        assert [e.kind for e in evs] == [EventKind.SCALE_OUT]
+        assert evs[0].ranks == (3,)
+        ag.add_rank(3, stage=1)
+        ctl.note_join(3)
+        # ...and a LATER real failure of the same rank is still re-detected
+        evs = []
+        for s in range(11, 11 + ag.max_confirm_misses()):
+            evs += ctl.observe(probes(s, alive={0, 1, 2}))
+        assert [e.kind for e in evs] == [EventKind.FAIL_STOP]
+        assert evs[0].ranks == (3,)
+
+    def test_resurrection_window_expires(self):
+        ag, ctl = self._mk(resurrection_window=2)
+        for s in range(ag.max_confirm_misses()):
+            ctl.observe(probes(s, alive={0, 1, 2}))
+        ag.remove_rank(3)
+        for s in range(5):                  # let the window lapse
+            ctl.observe(probes(s, alive={0, 1, 2}, n=3))
+        assert ctl.observe(probes(9, alive={0, 1, 2, 3})) == []
+
+    def test_stuck_grant_recovered(self):
+        ag, ctl = self._mk(grant_timeout=3)
+        ctl.grant(7, "spot capacity")
+        assert [g.rank for g in ctl.pending_grants()] == [7]
+        for s in range(3):
+            ctl.observe(probes(s, alive={0, 1, 2, 3}))
+        assert ctl.pending_grants() == []
+        assert [g.rank for g in ctl.stuck_grants()] == [7]
+
+    def test_joined_grant_not_stuck(self):
+        ag, ctl = self._mk(grant_timeout=3)
+        ctl.grant(7)
+        ctl.observe(probes(0, alive={0, 1, 2, 3}))
+        ag.add_rank(7, stage=1)
+        ctl.note_join(7)
+        for s in range(1, 6):
+            ctl.observe(probes(s, alive={0, 1, 2, 3}))
+        assert ctl.stuck_grants() == []

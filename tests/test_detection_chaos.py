@@ -1,0 +1,115 @@
+"""Detection-chaos fuzz layer: the four guarantees under imperfect probes.
+
+Fast shard: a 150-seed pure control-plane sweep (Agent + ElasticController,
+milliseconds per seed) plus a 2-seed numeric smoke of the full
+VirtualCluster chaos runner.  Slow shard: a numeric sweep whose budget is
+tunable via ``ELASWAVE_CHAOS_NUMERIC`` (nightly CI runs 100+ seeds through
+``benchmarks/fuzz_soak.py --chaos-traces``).
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.scenarios import (CHAOS_CLASSES, make_chaos_case, run_chaos_case,
+                             run_detector_chaos)
+from repro.scenarios.spec import ClusterWorkload
+
+
+class TestDetectorChaosSweep:
+    """Control-plane only: no numerics, so the sweep is wide and cheap."""
+
+    def test_150_seeds_no_permanent_false_evictions(self):
+        for seed in range(150):
+            run_detector_chaos(seed)
+
+    def test_case_generation_is_deterministic(self):
+        a, b = make_chaos_case(17), make_chaos_case(17)
+        assert a.chaos_class == b.chaos_class
+        assert a.actions == b.actions
+        assert a.workload == b.workload
+
+    def test_classes_and_repro_lines_covered(self):
+        seen = set()
+        for seed in range(40):
+            c = make_chaos_case(seed)
+            assert c.chaos_class in CHAOS_CLASSES
+            assert f"--mode chaos --seed {seed}" in c.repro()
+            if c.chaos_class == "flap_only":
+                assert c.actions == ()      # every eviction is false
+            seen.add(c.chaos_class)
+        assert seen == set(CHAOS_CLASSES)
+
+
+class TestNumericChaosSmoke:
+    """Full VirtualCluster under probe chaos — two seeds in the fast shard
+    (one corrupt-class, one flap-only), the rest behind the slow marker."""
+
+    @pytest.mark.parametrize("seed", [2, 4])
+    def test_chaos_case_upholds_invariants(self, seed):
+        run_chaos_case(make_chaos_case(seed))
+
+    @pytest.mark.slow
+    def test_numeric_chaos_sweep(self):
+        budget = int(os.environ.get("ELASWAVE_CHAOS_NUMERIC", "8"))
+        for seed in range(budget):
+            run_chaos_case(make_chaos_case(seed))
+
+
+class TestFalsePositiveEvictionCluster:
+    """End-to-end on the numeric cluster: a false-positive eviction followed
+    by resurrection keeps training consistent, and a LATER real failure of
+    the same worker is still detected and recovered."""
+
+    def test_false_eviction_rejoin_then_real_failure(self):
+        from repro.core.agent import Probe
+        w = ClusterWorkload(dp=3, pp=1, num_layers=2, global_batch=6,
+                            num_micro=1, seq_len=8, dropout_rate=0.0)
+        cl = w.make_cluster()
+        cl.run(2)
+
+        def truth_probes(alive_ranks):
+            return [Probe(cl.step_count, r, heartbeat=(r in alive_ranks),
+                          step_seconds=0.1)
+                    for r in range(cl.dp0 * cl.pp)]
+
+        # partition rank 1: its heartbeats are lost but the worker is fine
+        events = []
+        for _ in range(cl.controller.max_confirm_misses()):
+            events += cl.controller.observe(truth_probes({0, 2}))
+        assert [e.kind.value for e in events] == ["fail_stop"]
+        cl.apply_event(events[0])
+        assert not cl.alive[1, 0]
+        cl.run(2)
+
+        # the partition heals: resurrection re-admits through SCALE_OUT
+        events = cl.controller.observe(truth_probes({0, 1, 2}))
+        assert [e.kind.value for e in events] == ["scale_out"]
+        rec = cl.apply_event(events[0])
+        assert cl.alive[1, 0] and rec["total"] > 0
+        cl.run(2)
+        assert all(np.isfinite(cl.losses))
+
+        # later the SAME worker genuinely dies: re-detected and recovered
+        cl.inject_fail_stop(1, 0)
+        rec = cl.detect_and_recover()
+        assert rec is not None and rec["detect"] > 0
+        assert not cl.alive[1, 0]
+        cl.run(2)
+        assert all(np.isfinite(cl.losses))
+
+
+class TestOomWarningCluster:
+    def test_mem_pressure_probe_feeds_oom_warning(self):
+        """``Probe.mem_used`` is live: a rising footprint on one worker
+        produces an advisory OOM_RISK warning before the limit is hit."""
+        w = ClusterWorkload(dp=2, pp=1, num_layers=2, global_batch=4,
+                            num_micro=1, seq_len=8, dropout_rate=0.0)
+        cl = w.make_cluster()
+        for frac in (0.5, 0.65, 0.8):
+            cl.inject_mem_pressure(0, 0, frac)
+            cl.detect_and_recover()
+            cl.train_step()
+        assert [e.kind.value for e in cl.warnings] == ["oom_risk"]
+        assert cl.warnings[0].ranks == (0,)
+        assert bool(cl.alive.all())         # advisory: nobody was evicted
