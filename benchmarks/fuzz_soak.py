@@ -89,6 +89,10 @@ def main(argv=None) -> int:
     ap.add_argument("--numeric-traces", type=int, default=0,
                     help="numeric (VirtualCluster) trace budget — slow: "
                          "every cluster jit-compiles afresh")
+    ap.add_argument("--pallas-traces", type=int, default=0,
+                    help="pallas-mode numeric trace budget (kernels in the "
+                         "hot path, tolerance-tier invariant 1) — slowest: "
+                         "interpret-mode kernels on top of fresh jits")
     ap.add_argument("--chaos-traces", type=int, default=0,
                     help="detection-chaos trace budget (VirtualCluster under "
                          "dropped/delayed/duplicated/flapping probes and "
@@ -98,7 +102,8 @@ def main(argv=None) -> int:
                     help="first seed of the sweep")
     ap.add_argument("--seed", type=int, default=None,
                     help="reproduce exactly one seed and exit")
-    ap.add_argument("--mode", choices=("analytic", "cluster", "chaos"),
+    ap.add_argument("--mode",
+                    choices=("analytic", "cluster", "pallas", "chaos"),
                     default="analytic", help="mode for --seed repro runs")
     ap.add_argument("--policy", choices=POLICY_NAMES, default=None,
                     help="restrict to one policy (analytic mode)")
@@ -138,6 +143,7 @@ def main(argv=None) -> int:
     plan = [("analytic", args.traces,
              [args.policy] if args.policy else list(POLICY_NAMES)),
             ("cluster", args.numeric_traces, [None]),
+            ("pallas", args.pallas_traces, [None]),
             ("chaos", args.chaos_traces, [None])]
     for mode, budget, policies in plan:
         for i in range(budget):

@@ -1,5 +1,10 @@
 """§Roofline — aggregate the dry-run artifacts into the per-(arch x shape x
-mesh) roofline table: three terms, bottleneck, MODEL_FLOPS/HLO_FLOPs ratio."""
+mesh) roofline table: three terms, bottleneck, MODEL_FLOPS/HLO_FLOPs ratio.
+
+Also appends the kernel-vs-ref rows (``benchmarks.kernel_ref`` corpus): per
+Pallas kernel, interpret-mode wall clock vs the jnp oracle and the measured
+error against its declared tolerance tier.  On CPU these time the Pallas
+interpreter — trajectory data for the kernel layer, not a TPU roofline."""
 from __future__ import annotations
 
 import json
@@ -44,6 +49,21 @@ def table(arts, mesh="single", verbose=True):
     return rows
 
 
+def kernel_table(verbose=True):
+    """Kernel-vs-ref rows: interpret-mode kernel vs jnp oracle wall clock and
+    max error against the declared tier (``kernels.ops.TOLERANCE_TIERS``)."""
+    from .kernel_ref import bench_kernels
+    rows = bench_kernels()
+    if verbose:
+        print(f"  {'kernel case':34s} {'kernel_ms':>10s} {'ref_ms':>8s} "
+              f"{'max_abs_err':>12s} {'ok':>4s}")
+        for r in rows:
+            print(f"  {r['case']:34s} {r['kernel_ms']:10.2f} "
+                  f"{r['ref_ms']:8.2f} {r['max_abs_err']:12.3e} "
+                  f"{'ok' if r['within_tolerance'] else 'FAIL':>4s}")
+    return rows
+
+
 def main():
     t0 = time.perf_counter()
     arts = load_artifacts()
@@ -58,6 +78,12 @@ def main():
             bcounts[b] = bcounts.get(b, 0) + 1
     emit("roofline_dryrun", us,
          f"cells_ok={len(ok)};skipped={len(skipped)};bottlenecks={bcounts}")
+    t0 = time.perf_counter()
+    krows = kernel_table()
+    us = (time.perf_counter() - t0) * 1e6
+    nfail = sum(1 for r in krows if not r["within_tolerance"])
+    emit("roofline_kernels", us,
+         f"cases={len(krows)};tier_failures={nfail}")
     return rows
 
 

@@ -15,6 +15,11 @@ and the recovery executor on the reduced workload used by
       "recovery": {"fail_stop":         {"ref_ms": ..., "fast_ms": ..., "speedup": ...},
                    "scale_out":         {"ref_ms": ..., "fast_ms": ..., "speedup": ...},
                    "fail_slow_migrate": {"ref_ms": ..., "fast_ms": ..., "speedup": ...}},
+      "pallas_step": {"jnp_ms": ..., "pallas_ms": ..., "interpret": true,
+                      "loss_abs_diff": ...},
+      "kernels": [{"kernel": ..., "case": ..., "kernel_ms": ..., "ref_ms": ...,
+                   "max_abs_err": ..., "rtol": ..., "atol": ...,
+                   "within_tolerance": true}, ...],
       "reps": 5, "steps_per_rep": 3
     }
 
@@ -22,7 +27,13 @@ Timings are best-of-reps (resists scheduler noise on shared machines); the
 two paths are bit-identical in numerics (tests/test_fast_path_numerics.py),
 so this measures pure implementation overhead.  Informational: consumers
 should track the trajectory of ``speedup`` across commits, not gate on
-absolute numbers.
+absolute numbers — EXCEPT ``kernels[*].within_tolerance``, which is the
+kernel-vs-ref numerics gate (``main`` exits nonzero on a violation, and CI
+fails the build).  ``pallas_step`` runs the same workload with
+``use_pallas=True``: on this CPU container the kernels execute under the
+Pallas interpreter, so ``pallas_ms`` measures interpreter overhead, not TPU
+speedup; ``loss_abs_diff`` is the observed pallas-vs-jnp divergence after
+one step.
 """
 from __future__ import annotations
 
@@ -40,9 +51,10 @@ REPS = 5
 STEPS_PER_REP = 3
 
 
-def _mk(fast: bool) -> VirtualCluster:
+def _mk(fast: bool, use_pallas: bool = False) -> VirtualCluster:
     cfg = R.tiny_config("dense", num_layers=NUM_LAYERS)
-    return VirtualCluster(cfg, fast_path=fast, **WORKLOAD)
+    return VirtualCluster(cfg, fast_path=fast, use_pallas=use_pallas,
+                          **WORKLOAD)
 
 
 def bench_step() -> dict:
@@ -92,14 +104,38 @@ def bench_recovery() -> dict:
             for k, v in best.items()}
 
 
+def bench_pallas_step(reps: int = 2, steps: int = 2) -> dict:
+    """Per-step wall clock with the Pallas kernels in the hot path vs plain
+    jnp, plus the observed loss divergence after the first step.  Fewer reps
+    than the fast/legacy comparison: interpret-mode kernels are slow and this
+    row is trajectory data, not a speedup claim."""
+    import os
+    cls = {up: _mk(True, use_pallas=up) for up in (False, True)}
+    loss = {up: float(cl.train_step()) for up, cl in cls.items()}  # + compile
+    best = {False: float("inf"), True: float("inf")}
+    for _ in range(reps):
+        for up in (False, True):
+            t0 = time.perf_counter()
+            cls[up].run(steps)
+            best[up] = min(best[up], (time.perf_counter() - t0) / steps)
+    return {"jnp_ms": best[False] * 1e3, "pallas_ms": best[True] * 1e3,
+            "interpret": os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0",
+            "loss_abs_diff": abs(loss[True] - loss[False])}
+
+
 def run(verbose: bool = True) -> dict:
+    from .kernel_ref import bench_kernels
     step = bench_step()
     recovery = bench_recovery()
+    pallas_step = bench_pallas_step()
+    kernels = bench_kernels()
     result = {
         "workload": {**{k: v for k, v in WORKLOAD.items() if k != "seed"},
                      "num_layers": NUM_LAYERS},
         "step": step,
         "recovery": recovery,
+        "pallas_step": pallas_step,
+        "kernels": kernels,
         "reps": REPS,
         "steps_per_rep": STEPS_PER_REP,
     }
@@ -109,19 +145,31 @@ def run(verbose: bool = True) -> dict:
         for k, v in recovery.items():
             print(f"  {k}: ref={v['ref_ms']:.2f}ms fast={v['fast_ms']:.2f}ms "
                   f"speedup={v['speedup']:.2f}x")
+        print(f"  pallas_step: jnp={pallas_step['jnp_ms']:.1f}ms "
+              f"pallas={pallas_step['pallas_ms']:.1f}ms "
+              f"(interpret={pallas_step['interpret']}) "
+              f"loss_abs_diff={pallas_step['loss_abs_diff']:.3e}")
+        for r in kernels:
+            print(f"  kernel {r['case']:34s} err={r['max_abs_err']:.3e} "
+                  f"{'ok' if r['within_tolerance'] else 'FAIL'}")
     return result
 
 
-def main(out_path: str = "BENCH_train_step.json"):
+def main(out_path: str = "BENCH_train_step.json") -> int:
     t0 = time.perf_counter()
     result = run()
     us = (time.perf_counter() - t0) * 1e6
     Path(out_path).write_text(json.dumps(result, indent=2) + "\n")
+    failures = [r["case"] for r in result["kernels"]
+                if not r["within_tolerance"]]
     emit("bench_train_step", us,
          f"step_speedup={result['step']['speedup']:.2f}x;"
-         f"failstop_speedup={result['recovery']['fail_stop']['speedup']:.2f}x")
-    return result
+         f"failstop_speedup={result['recovery']['fail_stop']['speedup']:.2f}x;"
+         f"kernel_tier_failures={len(failures)}")
+    if failures:
+        print(f"FAIL: kernel(s) outside declared tolerance tier: {failures}")
+    return len(failures)
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

@@ -95,9 +95,18 @@ class VirtualCluster:
                  mem_cap: Optional[float] = None,
                  snapshot_enabled: bool = True,
                  non_blocking_migration: bool = True,
-                 fast_path: bool = True):
+                 fast_path: bool = True,
+                 use_pallas: Optional[bool] = None):
         assert global_batch % num_micro == 0
         assert (global_batch // num_micro) % dp == 0, "initial even split"
+        if use_pallas is None:
+            # env knob mirrors the fast_path/legacy pattern: default off keeps
+            # the plain-jnp path bit-identical; REPRO_USE_PALLAS=1 routes the
+            # forward through the Pallas kernels (tolerance-tier numerics,
+            # see core/invariants.KernelConsistencyChecker)
+            import os
+            use_pallas = os.environ.get("REPRO_USE_PALLAS", "0") == "1"
+        self.use_pallas = bool(use_pallas)
         self.cfg = cfg
         self.dp0, self.pp = dp, pp
         self.global_batch, self.num_micro, self.seq = global_batch, num_micro, seq_len
@@ -225,17 +234,21 @@ class VirtualCluster:
     # training math
     # ------------------------------------------------------------------
     def _loss_fn(self, stem, layers, head, tokens, labels, step_key, sample_ids):
+        # self.use_pallas routes the forward through the Pallas kernels; the
+        # legacy path shares this function via _grad_fn, so a fast/legacy twin
+        # pair stays bit-identical in either kernel mode
         cfg = self.cfg
-        x = R.apply_stem(stem, cfg, tokens)
+        x = R.apply_stem(stem, cfg, tokens, use_pallas=self.use_pallas)
         B, S, _ = x.shape
         positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
         ctx = RngCtx(step_key=step_key, sample_ids=sample_ids,
                      deterministic=cfg.dropout_rate <= 0.0)
         aux_total = jnp.zeros((), jnp.float32)
         for lid in range(cfg.num_layers):
-            x, aux = R.apply_layer(layers[lid], cfg, lid, x, positions, ctx)
+            x, aux = R.apply_layer(layers[lid], cfg, lid, x, positions, ctx,
+                                   use_pallas=self.use_pallas)
             aux_total = aux_total + aux
-        logits = R.apply_head(head, cfg, x)
+        logits = R.apply_head(head, cfg, x, use_pallas=self.use_pallas)
         from repro.models.transformer import softmax_xent
         return softmax_xent(logits[:, :-1], labels[:, 1:]) + aux_total
 

@@ -53,19 +53,23 @@ def init_encdec_params(key, cfg: ModelConfig) -> Dict[str, Any]:
     }
 
 
-def encode(params, cfg: ModelConfig, frames) -> jax.Array:
+def encode(params, cfg: ModelConfig, frames, use_pallas: bool = False,
+           remat: bool = False) -> jax.Array:
     """frames: [B, T, d] precomputed frame embeddings (frontend stub)."""
     B, T, _ = frames.shape
     x = frames.astype(cfg.jnp_dtype) + params["enc_pos"][None, :T, :]
     positions = jnp.broadcast_to(jnp.arange(T)[None, :], (B, T))
 
     def body(x, blkp):
-        h = L.rmsnorm(blkp["ln1"], x, cfg.norm_eps)
-        a, _ = L.apply_attention(blkp["attn"], cfg, h, positions, causal=False)
+        h = L.rmsnorm(blkp["ln1"], x, cfg.norm_eps, use_pallas=use_pallas)
+        a, _ = L.apply_attention(blkp["attn"], cfg, h, positions,
+                                 causal=False, use_pallas=use_pallas)
         x = x + a
-        h = L.rmsnorm(blkp["ln2"], x, cfg.norm_eps)
+        h = L.rmsnorm(blkp["ln2"], x, cfg.norm_eps, use_pallas=use_pallas)
         return x + L.apply_mlp(blkp["mlp"], cfg, h), None
 
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
     if cfg.scan_layers:
         x, _ = jax.lax.scan(body, x, params["encoder"])
     else:
@@ -76,7 +80,8 @@ def encode(params, cfg: ModelConfig, frames) -> jax.Array:
 
 
 def decode(params, cfg: ModelConfig, tokens, enc_out,
-           caches=None, cache_index=None):
+           caches=None, cache_index=None, use_pallas: bool = False,
+           remat: bool = False):
     """tokens: [B,S]; enc_out: [B,T,d]. Returns (logits, new_caches)."""
     B, S = tokens.shape
     x = L.embed(params["embed"], tokens)
@@ -91,22 +96,27 @@ def decode(params, cfg: ModelConfig, tokens, enc_out,
     def body(carry, xs):
         x = carry
         blkp, blkc = xs
-        h = L.rmsnorm(blkp["ln1"], x, cfg.norm_eps)
+        h = L.rmsnorm(blkp["ln1"], x, cfg.norm_eps, use_pallas=use_pallas)
         a, nc = L.apply_attention(blkp["attn"], cfg, h, positions,
-                                  kv_cache=blkc, cache_index=cache_index)
+                                  kv_cache=blkc, cache_index=cache_index,
+                                  use_pallas=use_pallas)
         x = x + a
         # cross-attention over encoder output (non-causal, no cache needed:
-        # enc_out K/V are recomputed — cheap at whisper scale)
-        h = L.rmsnorm(blkp["lnx"], x, cfg.norm_eps)
+        # enc_out K/V are recomputed — cheap at whisper scale).  use_pallas
+        # only engages when S == T (the kernel needs square q/k), which the
+        # _sdpa gate checks.
+        h = L.rmsnorm(blkp["lnx"], x, cfg.norm_eps, use_pallas=use_pallas)
         Hh, hd = cfg.num_heads, cfg.head_dim
         q = (h @ blkp["xattn"]["wq"]).reshape(B, S, Hh, hd)
         k = (enc_out @ blkp["xattn"]["wk"]).reshape(B, T, cfg.num_kv_heads, hd)
         v = (enc_out @ blkp["xattn"]["wv"]).reshape(B, T, cfg.num_kv_heads, hd)
-        a = L._sdpa(q, k, v, causal=False)
+        a = L._sdpa(q, k, v, causal=False, use_pallas=use_pallas)
         x = x + a.reshape(B, S, Hh * hd) @ blkp["xattn"]["wo"]
-        h = L.rmsnorm(blkp["ln2"], x, cfg.norm_eps)
+        h = L.rmsnorm(blkp["ln2"], x, cfg.norm_eps, use_pallas=use_pallas)
         return x + L.apply_mlp(blkp["mlp"], cfg, h), nc
 
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
     xs = (params["decoder"], caches)
     if cfg.scan_layers:
         x, new_caches = jax.lax.scan(body, x, xs)
@@ -129,9 +139,12 @@ def init_decoder_caches(cfg: ModelConfig, batch: int, max_len: int):
     return jax.tree.map(lambda a: jnp.broadcast_to(a[None], (nd,) + a.shape), one)
 
 
-def encdec_train_loss(params, cfg: ModelConfig, batch, rng_ctx=None):
-    enc_out = encode(params, cfg, batch["frames"])
-    logits, _ = decode(params, cfg, batch["tokens"], enc_out)
+def encdec_train_loss(params, cfg: ModelConfig, batch, rng_ctx=None,
+                      use_pallas: bool = False, remat: bool = False):
+    enc_out = encode(params, cfg, batch["frames"], use_pallas=use_pallas,
+                     remat=remat)
+    logits, _ = decode(params, cfg, batch["tokens"], enc_out,
+                       use_pallas=use_pallas, remat=remat)
     from .transformer import softmax_xent
     return softmax_xent(logits[:, :-1], batch["labels"][:, 1:])
 

@@ -196,9 +196,11 @@ def _sdpa(q, k, v, causal: bool, q_offset=None, use_pallas: bool = False):
     """
     B, S, H, hd = q.shape
     T, Hkv = k.shape[1], k.shape[2]
-    if use_pallas and causal and q_offset is None:
+    # Pallas kernel requires aligned square q/k (no cache offset, S == T);
+    # covers training self-attention, causal or not (encoder blocks).
+    if use_pallas and q_offset is None and S == T:
         from repro.kernels import ops as kops
-        return kops.flash_attention(q, k, v, causal=True)
+        return kops.flash_attention(q, k, v, causal=causal)
     rep = H // Hkv
     qr = q.reshape(B, S, Hkv, rep, hd)
     logits = jnp.einsum("bskrh,btkh->bkrst", qr, k).astype(jnp.float32)

@@ -33,9 +33,10 @@ def init_layer(key, cfg: ModelConfig, layer_idx: int) -> Dict[str, Any]:
 
 
 def apply_layer(params, cfg: ModelConfig, layer_idx: int, x, positions,
-                rng_ctx: L.RngCtx):
+                rng_ctx: L.RngCtx, use_pallas: bool = False):
     blk = flat_layer_types(cfg)[layer_idx]
-    x, _, aux = T.apply_block(params, cfg, blk, x, positions, rng_ctx, layer_idx)
+    x, _, aux = T.apply_block(params, cfg, blk, x, positions, rng_ctx,
+                              layer_idx, use_pallas=use_pallas)
     return x, aux
 
 
@@ -51,12 +52,14 @@ def init_head(key, cfg: ModelConfig):
             "head": L.init_lm_head(k1, cfg)}
 
 
-def apply_stem(params, cfg: ModelConfig, tokens):
+def apply_stem(params, cfg: ModelConfig, tokens, use_pallas: bool = False):
+    del use_pallas          # embedding lookup has no kernel; uniform signature
     return L.embed(params["embed"], tokens)
 
 
-def apply_head(params, cfg: ModelConfig, x):
-    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+def apply_head(params, cfg: ModelConfig, x, use_pallas: bool = False):
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps,
+                  use_pallas=use_pallas)
     return L.lm_logits(params["head"], x)
 
 
@@ -74,7 +77,8 @@ def model_param_shapes(cfg: ModelConfig):
 def make_train_loss(cfg: ModelConfig, use_pallas: bool = False, remat: bool = False):
     if cfg.is_encdec:
         def loss_fn(params, batch, rng_ctx=None):
-            return E.encdec_train_loss(params, cfg, batch, rng_ctx)
+            return E.encdec_train_loss(params, cfg, batch, rng_ctx,
+                                       use_pallas=use_pallas, remat=remat)
     else:
         def loss_fn(params, batch, rng_ctx=None):
             return T.train_loss(params, cfg, batch, rng_ctx,

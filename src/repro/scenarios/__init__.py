@@ -15,9 +15,9 @@ from repro.core.clusterview import ClusterView, FailureDomainMap, GroupDelta
 
 from .fuzz import (CHAOS_CLASSES, ChaosCase, DetectionChaosRunner, FuzzCase,
                    POLICY_NAMES, make_analytic_case, make_case,
-                   make_chaos_case, make_cluster_case, make_policy, run_case,
-                   run_chaos_case, run_detector_chaos, shrink_case,
-                   trace_is_legal)
+                   make_chaos_case, make_cluster_case, make_pallas_case,
+                   make_policy, run_case, run_chaos_case, run_detector_chaos,
+                   shrink_case, trace_is_legal)
 from .library import SCENARIOS, get_scenario
 from .metrics import MetricsCollector, ScenarioResult
 from .runner import (AnalyticScenarioRunner, ClusterScenarioRunner,
@@ -33,6 +33,7 @@ __all__ = [
     "MetricsCollector", "POLICY_NAMES", "SCENARIOS", "Scenario",
     "ScenarioResult", "ServeScenarioRunner", "ServeWorkload", "get_scenario",
     "make_analytic_case", "make_case", "make_chaos_case", "make_cluster_case",
+    "make_pallas_case",
     "make_policy", "node_shrink_cells", "run_case", "run_chaos_case",
     "run_detector_chaos", "run_scenario", "run_serve_scenario", "shrink_case",
     "trace_is_legal", "validate_event_legality",

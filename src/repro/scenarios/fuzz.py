@@ -363,11 +363,32 @@ def make_cluster_case(seed: int) -> FuzzCase:
                     w)
 
 
+def make_pallas_case(seed: int) -> FuzzCase:
+    """Pallas-mode cluster fuzzing: same trace grammar with the kernels in
+    the training hot path.  ``run_case`` sees ``workload.use_pallas`` and
+    swaps in the tolerance-tier :class:`KernelConsistencyChecker` for the
+    bit-exact parameter twin.  Interpret-mode kernels are slow, so traces
+    are shorter than plain cluster mode."""
+    rnd = random.Random(f"pallas-{seed}")
+    w = dataclasses.replace(draw_cluster_workload(rnd),
+                            family=rnd.choice(("dense", "ssm")),
+                            use_pallas=True)
+    horizon = rnd.randint(2, 3)
+    events = draw_trace(rnd, dp=w.dp, pp=w.pp, horizon=horizon,
+                        strategies=default_cluster_strategies(),
+                        max_events=2, p_event=0.7)
+    return FuzzCase(seed, "pallas",
+                    Scenario(f"fuzz-pallas-{seed}", tuple(events), horizon),
+                    w)
+
+
 def make_case(mode: str, seed: int):
     if mode == "analytic":
         return make_analytic_case(seed)
     if mode == "cluster":
         return make_cluster_case(seed)
+    if mode == "pallas":
+        return make_pallas_case(seed)
     if mode == "chaos":
         return make_chaos_case(seed)
     raise ValueError(f"unknown fuzz mode {mode!r}")
@@ -405,7 +426,9 @@ def run_case(case: FuzzCase, policy: Optional[str] = None, checkers=None,
                    else checkers)
             return AnalyticScenarioRunner(case.scenario, case.workload, pol,
                                           checkers=cks, **runner_kw).run()
-        cks = default_cluster_checkers() if checkers is None else checkers
+        cks = (default_cluster_checkers(
+                   use_pallas=getattr(case.workload, "use_pallas", False))
+               if checkers is None else checkers)
         return ClusterScenarioRunner(case.scenario, case.workload,
                                      checkers=cks, **runner_kw).run()
     except InvariantViolation as e:

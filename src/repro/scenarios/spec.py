@@ -45,18 +45,21 @@ class ClusterWorkload:
     seq_len: int = 16
     seed: int = 0
     rng_mode: str = "reshard"
+    use_pallas: bool = False
 
     def make_cluster(self, **overrides):
         """Build the VirtualCluster.  ``overrides`` pass straight through to
         the constructor — e.g. ``fast_path=False`` builds the bit-exact
-        ``core/legacy.py`` twin the invariant harness locksteps against."""
+        ``core/legacy.py`` twin the invariant harness locksteps against, and
+        ``use_pallas=False`` builds the plain-jnp twin the tolerance-tier
+        kernel checker compares a pallas-mode run against."""
         from repro.core.cluster import VirtualCluster
         from repro.models import registry as R
         cfg = R.tiny_config(self.family, num_layers=self.num_layers,
                             dropout_rate=self.dropout_rate)
         kw = dict(global_batch=self.global_batch, num_micro=self.num_micro,
                   seq_len=self.seq_len, seed=self.seed,
-                  rng_mode=self.rng_mode)
+                  rng_mode=self.rng_mode, use_pallas=self.use_pallas)
         kw.update(overrides)
         return VirtualCluster(cfg, dp=self.dp, pp=self.pp, **kw)
 
